@@ -1,0 +1,74 @@
+"""Roofline table assembly: reads the dry-run artifacts and renders the
+per-(arch × shape × mesh) three-term roofline with bottleneck calls.
+
+Run after `python -m repro.launch.dryrun`:
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"N/A: {r['skipped'][:60]}… |")
+    t = r["roofline_terms_s"]
+    ratio = r.get("useful_flops_ratio")
+    mem_gb = r["memory"]["peak_bytes_est"] / 2**30
+    return ("| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {k:.4f} | "
+            "{dom} | ratio={r} mem={g:.1f}GiB |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=t["compute_s"], m=t["memory_s"], k=t["collective_s"],
+        dom=r["dominant"].replace("_s", ""),
+        r=f"{ratio:.3f}" if ratio else "n/a", g=mem_gb)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,peak_gib")
+        for r in recs:
+            if "skipped" in r:
+                print(f"{r['arch']},{r['shape']},{r['mesh']},,,,skipped,,")
+                continue
+            t = r["roofline_terms_s"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{t['compute_s']:.6f},{t['memory_s']:.6f},"
+                  f"{t['collective_s']:.6f},{r['dominant']},"
+                  f"{r.get('useful_flops_ratio') or ''},"
+                  f"{r['memory']['peak_bytes_est']/2**30:.2f}")
+        return
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "bottleneck | notes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

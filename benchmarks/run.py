@@ -1,0 +1,133 @@
+"""Benchmark harness — one section per paper figure plus the roofline table.
+
+  fig1  — per-kernel speedup over serial for every scheduling strategy
+          (paper Fig. 1: the seven-framework comparison)
+  fig3  — Relic's per-kernel speedups (paper Fig. 3)
+  fig4  — geomean speedup without negative outliers (paper Fig. 4 method:
+          a kernel that degrades under a strategy contributes 1.0 — the
+          developer would keep the serial version)
+  spsc  — raw scheduling overhead: ns per submit+wait round-trip per
+          structure (the mechanism behind the figures)
+  roofline — summary of the dry-run artifacts, if present
+
+Output: ``name,us_per_call,derived`` CSV per line.
+Usage: PYTHONPATH=src python -m benchmarks.run [--iters 1000] [--only fig1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+STRATEGIES = ["serial", "relic_spsc", "locked_queue_spin",
+              "locked_queue_condvar", "threadpool_futures", "thread_per_task",
+              "jax_async_stream", "fused_vmap"]
+
+
+def run_figures(iters: int):
+    from benchmarks.paper_kernels import build_tasks
+    from benchmarks.schedulers import bench_strategies
+
+    tasks = build_tasks()
+    results = {}
+    for name, (ta, tb, fused) in tasks.items():
+        results[name] = bench_strategies(ta, tb, fused, iters=iters)
+
+    # fig1: µs/iter and speedup-over-serial per kernel × strategy
+    print("# fig1: per-kernel scheduling comparison")
+    print("name,us_per_call,derived")
+    for kernel, res in results.items():
+        base = res["serial"]
+        for strat in STRATEGIES:
+            sp = base / res[strat]
+            print(f"fig1/{kernel}/{strat},{res[strat]:.2f},speedup={sp:.3f}")
+
+    # fig3: Relic per-kernel speedups
+    print("# fig3: Relic speedup over serial per kernel")
+    print("name,us_per_call,derived")
+    for kernel, res in results.items():
+        sp = res["serial"] / res["relic_spsc"]
+        print(f"fig3/{kernel},{res['relic_spsc']:.2f},speedup={sp:.3f}")
+
+    # fig4: geomean without negative outliers
+    print("# fig4: geomean speedup, negative outliers replaced by serial")
+    print("name,us_per_call,derived")
+    fig4 = {}
+    for strat in STRATEGIES:
+        sps = [max(results[k]["serial"] / results[k][strat], 1.0)
+               for k in results]
+        gm = math.exp(sum(math.log(s) for s in sps) / len(sps))
+        fig4[strat] = gm
+        mean_us = sum(results[k][strat] for k in results) / len(results)
+        print(f"fig4/{strat},{mean_us:.2f},geomean_speedup={gm:.3f}")
+    best_other = max((v for k, v in fig4.items()
+                      if k not in ("relic_spsc", "fused_vmap", "serial")),
+                     default=1.0)
+    rel = fig4.get("relic_spsc", 1.0)
+    print(f"fig4/relic_vs_best_framework,0.00,"
+          f"relic_gain={(rel / best_other - 1) * 100:.1f}%")
+    return results
+
+
+def run_spsc(iters: int):
+    """Raw round-trip overhead per scheduling structure (empty task)."""
+    from benchmarks.schedulers import bench_strategies
+
+    import jax
+    import jax.numpy as jnp
+
+    zero = jnp.zeros(())
+    f = jax.jit(lambda x: x + 1)
+    f(zero).block_until_ready()
+    res = bench_strategies(lambda: f(zero), lambda: f(zero),
+                           lambda: f(zero), iters=iters)
+    print("# spsc: scheduling overhead on a trivial task")
+    print("name,us_per_call,derived")
+    for k, v in res.items():
+        print(f"spsc/{k},{v:.2f},overhead_vs_serial={v - res['serial']:.2f}us")
+    return res
+
+
+def run_roofline():
+    from benchmarks.roofline import load_records
+
+    recs = load_records()
+    if not recs:
+        print("# roofline: no dry-run artifacts (run repro.launch.dryrun)")
+        return
+    print("# roofline: dominant term per dry-run cell (seconds/step)")
+    print("name,us_per_call,derived")
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "skipped" in r:
+            print(f"{tag},0.00,skipped")
+            continue
+        t = r["roofline_terms_s"]
+        dom = r["dominant"]
+        print(f"{tag},{t[dom]*1e6:.0f},dominant={dom}"
+              f";ratio={r.get('useful_flops_ratio') or 0:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--only", default="all",
+                    choices=["all", "fig1", "spsc", "roofline"])
+    args = ap.parse_args()
+    t0 = time.time()
+    if args.only in ("all", "fig1"):
+        run_figures(args.iters)
+    if args.only in ("all", "spsc"):
+        run_spsc(args.iters)
+    if args.only in ("all", "roofline"):
+        run_roofline()
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

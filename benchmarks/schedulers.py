@@ -1,0 +1,202 @@
+"""Scheduling strategies benchmarked against each other (paper §V / Fig 1).
+
+The paper compares seven task-parallel frameworks scheduling two ~1 µs task
+instances onto the two logical threads of one SMT core. The host-runtime
+translation benchmarks the same *scheduling structures* on this machine:
+
+  serial              — both instances sequentially in the main thread
+                        (the paper's baseline)
+  relic_spsc          — the paper's design: busy-wait SPSC ring, fixed
+                        producer/consumer roles (repro.core.relic)
+  locked_queue_spin   — persistent worker, mutex-protected deque, spin wait
+                        (X-OpenMP-flavoured: lock-based + spinning)
+  locked_queue_condvar— persistent worker, queue.Queue (condvar suspension)
+                        (GNU-OpenMP-flavoured: suspension-based waits)
+  threadpool_futures  — concurrent.futures 2-worker pool
+                        (oneTBB/Taskflow-flavoured: general pool + futures)
+  thread_per_task     — a fresh thread per task (worst-case spawn overhead)
+  jax_async_stream    — both instances dispatched asynchronously into the
+                        XLA stream from one thread, one sync (the device-side
+                        two-lane analogue: dispatch lane + compute lane)
+  fused_vmap          — the instances fused into one compiled call (what a
+                        TPU-native port of "two SMT lanes" ultimately wants)
+
+Every strategy runs the *same* two jitted task instances; measured time is
+wall-clock per iteration over `iters` iterations after warmup.
+"""
+
+from __future__ import annotations
+
+import collections
+import statistics
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List
+
+import jax
+
+from repro.core.relic import Relic
+
+
+class _SpinWorker:
+    """Persistent worker: lock-protected deque + spin waits on both sides."""
+
+    def __init__(self):
+        self._dq = collections.deque()
+        self._lock = threading.Lock()
+        self._done = 0
+        self._submitted = 0
+        self._stop = False
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while not self._stop:
+            item = None
+            with self._lock:
+                if self._dq:
+                    item = self._dq.popleft()
+            if item is None:
+                time.sleep(0)
+                continue
+            item()
+            self._done += 1
+
+    def submit(self, fn):
+        with self._lock:
+            self._dq.append(fn)
+        self._submitted += 1
+
+    def wait(self):
+        while self._done < self._submitted:
+            time.sleep(0)
+
+    def close(self):
+        self._stop = True
+        self._t.join(timeout=2)
+
+
+class _CondvarWorker:
+    """Persistent worker: queue.Queue (condition-variable suspension)."""
+
+    def __init__(self):
+        import queue
+
+        self._q = queue.Queue()
+        self._done = threading.Semaphore(0)
+        self._submitted = 0
+        self._stop = False
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            fn = self._q.get()
+            if fn is None:
+                return
+            fn()
+            self._done.release()
+
+    def submit(self, fn):
+        self._q.put(fn)
+        self._submitted += 1
+
+    def wait(self):
+        for _ in range(self._submitted):
+            self._done.acquire()
+        self._submitted = 0
+
+    def close(self):
+        self._q.put(None)
+        self._t.join(timeout=2)
+
+
+def _timeit(step: Callable[[], None], iters: int, warmup: int) -> float:
+    for _ in range(warmup):
+        step()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        step()
+    return (time.perf_counter() - t0) / iters * 1e6  # µs/iteration
+
+
+def bench_strategies(task_a: Callable[[], jax.Array],
+                     task_b: Callable[[], jax.Array],
+                     fused: Callable[[], jax.Array],
+                     *, iters: int = 1000, warmup: int = 50) -> Dict[str, float]:
+    """Returns µs/iteration per strategy; an iteration runs both instances."""
+    out: Dict[str, float] = {}
+
+    def run_sync(fn):
+        fn().block_until_ready()
+
+    # --- serial -----------------------------------------------------------
+    out["serial"] = _timeit(lambda: (run_sync(task_a), run_sync(task_b)),
+                            iters, warmup)
+
+    # --- relic (busy-wait SPSC, fixed roles) -------------------------------
+    rt = Relic(start_awake=True).start()
+
+    def relic_step():
+        rt.submit(run_sync, task_b)
+        run_sync(task_a)
+        rt.wait()
+
+    out["relic_spsc"] = _timeit(relic_step, iters, warmup)
+    rt.shutdown()
+
+    # --- locked queue + spin ------------------------------------------------
+    w = _SpinWorker()
+
+    def spin_step():
+        w.submit(lambda: run_sync(task_b))
+        run_sync(task_a)
+        w.wait()
+
+    out["locked_queue_spin"] = _timeit(spin_step, iters, warmup)
+    w.close()
+
+    # --- locked queue + condvar ---------------------------------------------
+    cw = _CondvarWorker()
+
+    def cv_step():
+        cw.submit(lambda: run_sync(task_b))
+        run_sync(task_a)
+        cw.wait()
+
+    out["locked_queue_condvar"] = _timeit(cv_step, iters, warmup)
+    cw.close()
+
+    # --- thread pool ---------------------------------------------------------
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        def pool_step():
+            fa = pool.submit(run_sync, task_a)
+            fb = pool.submit(run_sync, task_b)
+            fa.result()
+            fb.result()
+
+        out["threadpool_futures"] = _timeit(pool_step, iters, warmup)
+
+    # --- thread per task -------------------------------------------------------
+    def tpt_step():
+        t = threading.Thread(target=run_sync, args=(task_b,))
+        t.start()
+        run_sync(task_a)
+        t.join()
+
+    out["thread_per_task"] = _timeit(tpt_step, max(iters // 4, 100), warmup)
+
+    # --- async dispatch into the XLA stream ------------------------------------
+    def async_step():
+        ra = task_a()
+        rb = task_b()
+        ra.block_until_ready()
+        rb.block_until_ready()
+
+    out["jax_async_stream"] = _timeit(async_step, iters, warmup)
+
+    # --- fused (one compiled call) ----------------------------------------------
+    out["fused_vmap"] = _timeit(lambda: run_sync(fused), iters, warmup)
+
+    return out

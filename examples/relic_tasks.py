@@ -1,0 +1,41 @@
+"""The paper's experiment, live: two instances of each fine-grained kernel
+(six GAP graph kernels + JSON structural parse, paper §IV) scheduled by each
+strategy; µs/iteration and speedup-over-serial per kernel.
+
+This is the interactive version of `benchmarks/run.py --only fig1`.
+
+Run:  PYTHONPATH=src python examples/relic_tasks.py [--iters 300]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.paper_kernels import build_tasks  # noqa: E402
+from benchmarks.schedulers import bench_strategies  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=200)
+    args = ap.parse_args()
+
+    tasks = build_tasks()
+    print(f"{'kernel':<8}" + "".join(f"{s:>22}" for s in
+          ("serial", "relic_spsc", "jax_async_stream", "fused_vmap")))
+    for name, (ta, tb, fused) in tasks.items():
+        res = bench_strategies(ta, tb, fused, iters=args.iters)
+        base = res["serial"]
+        row = f"{name:<8}"
+        for s in ("serial", "relic_spsc", "jax_async_stream", "fused_vmap"):
+            row += f"{res[s]:>12.1f}us x{base/res[s]:>5.2f}  "
+        print(row)
+    print("\n(1-CPU container: thread-based overlap is GIL-bound — see "
+          "EXPERIMENTS.md §Paper-repro for the full 8-strategy figure and "
+          "the SMT-assumption discussion.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+with a fixed-length KV cache — the code path the decode_32k dry-run cells
+lower at pod scale.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch qwen3_14b]
+(any arch id works; smoke-sized weights are used so every family runs on CPU)
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_14b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--batch", str(args.batch),
+                "--prompt-len", "12", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

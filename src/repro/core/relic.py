@@ -1,0 +1,208 @@
+"""Relic host runtime: specialized two-thread fine-grained tasking (paper §VI).
+
+Faithful port of the paper's design to a Python host runtime:
+
+  * exactly two roles — the **main** thread (producer) and one **assistant**
+    thread (consumer). The assistant is created and owned by the runtime.
+  * the only scheduling structure is a bounded SPSC ring (capacity 128);
+    no work stealing, no priorities, no dynamic load balancing.
+  * task submission is only legal from the main thread; the assistant cannot
+    submit (recursive task creation is unsupported, exactly as in the paper).
+  * waiting is busy-wait first (paper §VI-B: spinning wins for short waits in
+    lightly-contended two-thread settings), with explicit developer-driven
+    ``wake_up_hint()`` / ``sleep_hint()`` to park the assistant across long
+    serial sections instead of a hybrid spin-then-sleep heuristic.
+
+On TPU the same schedule is realized by the DMA/compute lanes inside the
+Pallas kernels (see ``repro.kernels.relic_matmul``) and by the ppermute ring
+in ``repro.core.collective_matmul``; this module is the host-scale instance,
+used by the data pipeline and the async checkpoint manager.
+
+CPython note (recorded in DESIGN.md §2): overlap is only real for tasks that
+release the GIL (JAX dispatch/compute, NumPy kernels, file I/O). That matches
+the paper's scope — Relic targets *parallelizable sections*, and the hints
+exist precisely because the rest of the application is serial.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.spsc import DEFAULT_CAPACITY, SpscRing
+
+
+class RelicUsageError(RuntimeError):
+    """Raised on API misuse (e.g. submit from the assistant thread)."""
+
+
+@dataclass
+class RelicStats:
+    """Counters for observability; all updated on the owning thread only."""
+
+    submitted: int = 0
+    completed: int = 0
+    producer_full_spins: int = 0     # times submit() found the ring full
+    assistant_empty_spins: int = 0   # assistant poll iterations that found no work
+    parks: int = 0                   # times the assistant actually parked
+    task_errors: int = 0
+    last_error: Optional[BaseException] = field(default=None, repr=False)
+
+
+class _Task:
+    __slots__ = ("fn", "args", "kwargs")
+
+    def __init__(self, fn, args, kwargs):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+
+def _default_spin_yield() -> int:
+    """`pause`-cadence adaptation: the paper assumes two hardware contexts
+    (SMT). When the host has them, yield rarely (spin hot, paper §VI-B);
+    when threads outnumber cores (this 1-core container), spin-waiting
+    starves the partner thread across the GIL, so yield every iteration."""
+    return 1 if (os.cpu_count() or 1) < 2 + 1 else 64
+
+
+_SPIN_PAUSE_EVERY = _default_spin_yield()
+
+
+class Relic:
+    """The Relic runtime: one producer (main) + one assistant (consumer).
+
+    Usage::
+
+        rt = Relic()
+        rt.start()
+        rt.wake_up_hint()          # before a parallelizable section
+        rt.submit(fn, a, b)        # main thread only
+        ...                        # main thread does its own half of the work
+        rt.wait()                  # barrier for all submitted tasks
+        rt.sleep_hint()            # after the section
+        rt.shutdown()
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = False):
+        self._ring = SpscRing(capacity)
+        self.stats = RelicStats()
+        self._completed = 0              # written by assistant only
+        self._shutdown = False
+        self._awake = threading.Event()  # wake_up_hint/sleep_hint state
+        if start_awake:
+            self._awake.set()
+        self._assistant: Optional[threading.Thread] = None
+        self._main_ident: Optional[int] = None
+
+    # ------------------------------------------------------------------ roles
+
+    def start(self) -> "Relic":
+        if self._assistant is not None:
+            raise RelicUsageError("Relic runtime already started")
+        self._main_ident = threading.get_ident()
+        self._assistant = threading.Thread(
+            target=self._assistant_loop, name="relic-assistant", daemon=True
+        )
+        self._assistant.start()
+        return self
+
+    def _check_main(self, what: str) -> None:
+        ident = threading.get_ident()
+        if self._assistant is not None and ident == self._assistant.ident:
+            # Paper §VI-A: "The assistant thread cannot submit tasks, hence,
+            # creating tasks recursively is not supported in Relic."
+            raise RelicUsageError(f"{what} called from the assistant thread")
+        if self._main_ident is not None and ident != self._main_ident:
+            raise RelicUsageError(
+                f"{what} must be called from the main (producer) thread"
+            )
+
+    # ------------------------------------------------------------- public API
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        """Submit a fine-grained task (main thread only). Busy-waits if full."""
+        self._check_main("submit()")
+        if self._shutdown:
+            raise RelicUsageError("submit() after shutdown")
+        self.stats.submitted += 1
+        task = _Task(fn, args, kwargs)
+        spins = 0
+        while not self._ring.push(task):
+            # Producer-side busy wait: bounded ring is the backpressure.
+            self.stats.producer_full_spins += 1
+            spins += 1
+            if spins % _SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)  # the Python analogue of `pause`: yield, no park
+
+    def wait(self) -> None:
+        """Block (busy-wait) until every submitted task has completed."""
+        self._check_main("wait()")
+        target = self.stats.submitted
+        spins = 0
+        while self._completed < target:
+            spins += 1
+            if spins % _SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)
+        self.stats.completed = self._completed
+        if self.stats.last_error is not None:
+            err, self.stats.last_error = self.stats.last_error, None
+            raise err
+
+    def wake_up_hint(self) -> None:
+        """Developer hint: a parallelizable section is imminent (paper §VI-B)."""
+        self._awake.set()
+
+    def sleep_hint(self) -> None:
+        """Developer hint: no tasks for a while; assistant may park."""
+        self._awake.clear()
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        if self._assistant is None:
+            return
+        self._shutdown = True
+        self._awake.set()  # release a parked assistant so it can observe shutdown
+        self._assistant.join(timeout)
+        self._assistant = None
+
+    # ---------------------------------------------------------- assistant side
+
+    def _assistant_loop(self) -> None:
+        ring = self._ring
+        stats = self.stats
+        spins = 0
+        while True:
+            task = ring.pop()
+            if task is None:
+                if self._shutdown:
+                    return
+                if not self._awake.is_set():
+                    # sleep_hint() was given: park on the event (OS suspension)
+                    # instead of burning the core. wake_up_hint() releases us.
+                    stats.parks += 1
+                    self._awake.wait()
+                    continue
+                stats.assistant_empty_spins += 1
+                spins += 1
+                if spins % _SPIN_PAUSE_EVERY == 0:
+                    time.sleep(0)  # `pause`-like: yield the GIL, stay runnable
+                continue
+            spins = 0
+            try:
+                task.fn(*task.args, **task.kwargs)
+            except BaseException as e:  # surfaced at the next wait()
+                stats.task_errors += 1
+                stats.last_error = e
+            # Single atomic publication of completion (assistant-only writer).
+            self._completed += 1
+
+    # ------------------------------------------------------------- context mgr
+
+    def __enter__(self) -> "Relic":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()

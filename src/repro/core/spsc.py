@@ -1,0 +1,73 @@
+"""Bounded single-producer single-consumer ring queue (paper §VI-A).
+
+The paper uses Boost.Lockfree's SPSC queue with capacity 128. This is the
+CPython analogue: a preallocated ring with two monotonically increasing
+counters. Only the producer writes ``_tail``; only the consumer writes
+``_head``. Under CPython, aligned int stores/loads are atomic (protected by
+the interpreter), so the fast path takes no lock — structurally identical to
+the Lamport SPSC queue the paper builds on [61].
+
+The queue is intentionally *not* multi-producer safe: Relic forbids the
+assistant thread from submitting tasks (no recursive spawn, paper §VI-A), so a
+single producer is an invariant, not a limitation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+DEFAULT_CAPACITY = 128  # paper: "We set a capacity of the queue to 128 entries."
+
+
+class SpscRing:
+    """Lamport-style bounded SPSC ring buffer.
+
+    push/pop never block; they return False/None when full/empty so callers
+    control their own waiting policy (busy-wait in Relic, paper §VI-B).
+    """
+
+    __slots__ = ("_buf", "_capacity", "_head", "_tail")
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self._capacity = capacity
+        self._buf: list[Any] = [None] * capacity
+        self._head = 0  # next slot to pop  (written by consumer only)
+        self._tail = 0  # next slot to push (written by producer only)
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    def __len__(self) -> int:
+        # Racy but monotonic-safe estimate; exact when called from either end.
+        return self._tail - self._head
+
+    def empty(self) -> bool:
+        return self._tail == self._head
+
+    def full(self) -> bool:
+        return self._tail - self._head >= self._capacity
+
+    def push(self, item: Any) -> bool:
+        """Producer side. Returns False if the ring is full."""
+        tail = self._tail
+        if tail - self._head >= self._capacity:
+            return False
+        self._buf[tail % self._capacity] = item
+        # Publication: the tail increment makes the slot visible. In CPython
+        # the GIL orders the buffer write before the counter write.
+        self._tail = tail + 1
+        return True
+
+    def pop(self) -> Optional[Any]:
+        """Consumer side. Returns None if the ring is empty."""
+        head = self._head
+        if self._tail == head:
+            return None
+        idx = head % self._capacity
+        item = self._buf[idx]
+        self._buf[idx] = None  # drop reference early (keeps GC pressure flat)
+        self._head = head + 1
+        return item

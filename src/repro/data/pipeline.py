@@ -1,0 +1,143 @@
+"""Data pipeline with a Relic-prefetched SPSC batch queue.
+
+The host-side instance of the paper's pattern (DESIGN.md §2): the **assistant
+thread produces** batches (synthetic generation / memmap reads / host->device
+transfer release the GIL) while the **main thread consumes** them in the
+train loop. `wake_up_hint()` is issued when the loop starts, `sleep_hint()`
+between epochs/evals — the paper's explicit control points.
+
+Determinism/restart: batch `i` is a pure function of (seed, i, shard), so
+resuming from step `i` after a failure replays the exact stream; no iterator
+state needs checkpointing beyond the step counter.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from repro.core.relic import Relic
+from repro.core.spsc import SpscRing
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    seed: int = 0
+    shard: int = 0          # this host's index
+    num_shards: int = 1
+    prefetch: int = 8       # SPSC queue depth for prefetched batches
+
+
+class SyntheticLM:
+    """Seeded synthetic token stream (zipf-ish marginals so losses move)."""
+
+    def __init__(self, dc: DataConfig):
+        self.dc = dc
+        probs = 1.0 / np.arange(1, dc.vocab_size + 1) ** 1.1
+        self._probs = probs / probs.sum()
+
+    def batch(self, index: int) -> dict:
+        dc = self.dc
+        rng = np.random.default_rng(
+            np.random.SeedSequence([dc.seed, index, dc.shard]))
+        b = dc.global_batch // dc.num_shards
+        toks = rng.choice(dc.vocab_size, size=(b, dc.seq_len + 1),
+                          p=self._probs).astype(np.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": np.ones((b, dc.seq_len), np.float32),
+        }
+
+
+class MemmapLM:
+    """Flat token file (np.memmap) chunked into fixed-length sequences."""
+
+    def __init__(self, dc: DataConfig, path: str, dtype=np.int32):
+        self.dc = dc
+        self._data = np.memmap(path, dtype=dtype, mode="r")
+        self._n_seqs = (len(self._data) - 1) // dc.seq_len
+
+    def batch(self, index: int) -> dict:
+        dc = self.dc
+        rng = np.random.default_rng(
+            np.random.SeedSequence([dc.seed, index, dc.shard]))
+        b = dc.global_batch // dc.num_shards
+        starts = rng.integers(0, self._n_seqs, size=b) * dc.seq_len
+        toks = np.stack([np.asarray(self._data[s:s + dc.seq_len + 1])
+                         for s in starts]).astype(np.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": np.ones((b, dc.seq_len), np.float32),
+        }
+
+
+class PrefetchPipeline:
+    """SPSC-prefetched batch stream driven by a Relic assistant."""
+
+    def __init__(self, source, dc: DataConfig, start_index: int = 0,
+                 transform: Optional[Callable[[dict], dict]] = None):
+        self.source = source
+        self.dc = dc
+        self._next_submit = start_index
+        self._transform = transform
+        self._ring = SpscRing(dc.prefetch)
+        self._relic = Relic(capacity=dc.prefetch, start_awake=False)
+        self._started = False
+
+    # -- assistant-side task ------------------------------------------------
+    def _produce(self, index: int) -> None:
+        batch = self.source.batch(index)
+        if self._transform is not None:
+            batch = self._transform(batch)
+        while not self._ring.push((index, batch)):
+            time.sleep(0)  # bounded queue backpressure
+
+    # -- main-thread API ----------------------------------------------------
+    def start(self) -> "PrefetchPipeline":
+        if not self._started:
+            self._relic.start()
+            self._relic.wake_up_hint()
+            for _ in range(self.dc.prefetch):
+                self._relic.submit(self._produce, self._next_submit)
+                self._next_submit += 1
+            self._started = True
+        return self
+
+    def next_batch(self) -> dict:
+        assert self._started, "call start() first"
+        while True:
+            item = self._ring.pop()
+            if item is not None:
+                break
+            time.sleep(0)
+        index, batch = item
+        # keep the assistant one window ahead
+        self._relic.submit(self._produce, self._next_submit)
+        self._next_submit += 1
+        return batch
+
+    def pause(self) -> None:
+        """Between parallelizable sections (paper's sleep_hint)."""
+        self._relic.sleep_hint()
+
+    def resume(self) -> None:
+        self._relic.wake_up_hint()
+
+    def stop(self) -> None:
+        if self._started:
+            self._relic.shutdown()
+            self._started = False
+
+    def __iter__(self) -> Iterator[dict]:
+        self.start()
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a jit wrapper in
+``ops`` and an independent pure-jnp oracle in ``ref``:
+
+  relic_matmul      — tiled matmul; the HBM→VMEM BlockSpec pipeline is the
+                      paper's SPSC producer/consumer ring (DESIGN.md §2)
+  relic_matmul_gated— fused act(x@Wg)*(x@Wu) (no HBM intermediates)
+  flash_attention   — GQA causal/full streaming attention
+  wkv6              — RWKV-6 chunked recurrence (VMEM-resident state chain)
+  ssd               — Mamba-2 chunked recurrence
+
+Validated on CPU with interpret=True; compiled natively on TPU backends.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

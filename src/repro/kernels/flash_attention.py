@@ -1,0 +1,101 @@
+"""Flash attention (GQA, optional causal) as a Pallas TPU kernel.
+
+Layout: [B, H, S, D] (ops.py transposes from the model's [B, S, H, D]).
+Grid: (batch, q_head, q_block, kv_block) — the kv_block axis is the
+sequential consumer loop; running (m, l, acc) live in VMEM scratch across the
+kv sweep and the output block is flushed on the last kv step. The BlockSpec
+pipeline prefetches K/V block t+1 while block t is being consumed — the same
+Relic SPSC producer/consumer structure as relic_matmul.
+
+Causal blocks that are fully masked are skipped with `pl.when` (no MXU work),
+which is the kernel-level version of the §Perf causal-waste iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(causal, scale, bq, bk, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip kv blocks strictly above the diagonal band
+    run = True
+    if causal:
+        run = ki * bk <= qi * bq + (bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[:, :1]                              # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)                             # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                     # [bq, 1]
+        l_ref[:, :1] = l_ref[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_ref[:, :1] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                # [bk, D]
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,               # [B, H, Sq, D]
+    k: jax.Array,               # [B, Hkv, Sk, D]
+    v: jax.Array,               # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = d ** -0.5
+    kernel = functools.partial(_fa_kernel, causal, scale, bq, bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-padded)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

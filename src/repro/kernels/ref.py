@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (independent implementations —
+no code shared with the kernels or the model fast paths)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)
+
+
+def matmul_gated_ref(x, w_gate, w_up, act: str = "silu", out_dtype=None):
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    if act == "silu":
+        g = g * jax.nn.sigmoid(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g)
+    out = g * (xf @ w_up.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Sk,D] (GQA by head repeat)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Naive per-step recurrence. All inputs [B,H,T,K]; u [H,K]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+    b, h, t, kk = rf.shape
+    state0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp   # [B,H,K]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        out = jnp.einsum("bhi,bhij->bhj", rt,
+                         state + uf[None, :, :, None] * kv)
+        state = state * jnp.exp(lwt)[..., None] + kv
+        return state, out
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, state0, xs)
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype)
+
+
+def ssd_ref(x, a, b, c):
+    """Naive per-step SSD. x [B,H,T,P]; a [B,H,T]; b/c [B,T,N]."""
+    xf, af, bf, cf = (t.astype(jnp.float32) for t in (x, a, b, c))
+    bb, h, t, p = xf.shape
+    n = bf.shape[-1]
+    state0 = jnp.zeros((bb, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, at, bt, ct = inp     # [B,H,P], [B,H], [B,N], [B,N]
+        state = state * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (xf.transpose(2, 0, 1, 3), af.transpose(2, 0, 1),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)

@@ -1,0 +1,78 @@
+"""Mamba-2 SSD chunked recurrence as a Pallas TPU kernel.
+
+Layout: x [B, H, T, P], a (log decay) [B, H, T], b/c [B, T, N] (shared across
+heads, n_groups=1). Grid: (batch, head, chunk), sequential chunk axis with
+the [P, N] state in VMEM scratch — same SPSC chunk-state chain as wkv6 but
+with scalar-per-step decay, so the intra-chunk term is a clean C×C matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(chunk, x_ref, a_ref, b_ref, c_ref, o_ref, state_ref):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # [C, P]
+    a = a_ref[0, 0].astype(jnp.float32)      # [C]
+    b = b_ref[0].astype(jnp.float32)         # [C, N]
+    c = c_ref[0].astype(jnp.float32)         # [C, N]
+
+    la = jnp.cumsum(a)                       # [C] inclusive
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)    # [C, C]
+    n = x.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    decay = jnp.exp(la[:, None] - la[None, :])
+    w = jnp.where(row >= col, cb * decay, 0.0)
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)       # [C, P]
+
+    # inter-chunk: y_t += exp(la_t) * c_t . state   (state: [P, N])
+    y = y + jnp.exp(la)[:, None] * jnp.dot(
+        c, state_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    la_end = la[-1]
+    dec_end = jnp.exp(la_end - la)           # [C]
+    state_ref[...] = state_ref[...] * jnp.exp(la_end) + jnp.dot(
+        (x * dec_end[:, None]).T, b, preferred_element_type=jnp.float32)
+
+
+def ssd_bhtp(
+    x: jax.Array,      # [B, H, T, P]
+    a: jax.Array,      # [B, H, T]
+    b: jax.Array,      # [B, T, N]
+    c: jax.Array,      # [B, T, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bb, h, t, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    kernel = functools.partial(_ssd_kernel, chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bb, h, t // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bb, h, t, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

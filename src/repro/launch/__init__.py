@@ -1,0 +1,12 @@
+"""Launch tooling: mesh builders, jit step builders, dry-run, train/serve
+drivers. NOTE: `dryrun` must be imported/executed as a fresh process (it sets
+XLA_FLAGS for 512 host devices before importing jax)."""
+
+from repro.launch.mesh import make_host_mesh, make_mesh, make_production_mesh  # noqa: F401
+from repro.launch.steps import (  # noqa: F401
+    abstract_serve_state,
+    abstract_train_state,
+    make_serve_step,
+    make_train_step,
+    make_train_state,
+)

@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + greedy decode with a fixed-length KV
+cache. Demonstrates the serve_step path the decode dry-run cells lower.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch relic_tiny --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+
+def prefill_via_decode(model, params, cache, prompts, serve_step):
+    """Feed prompt tokens one-by-one (teacher forcing) to fill the cache."""
+    b, plen = prompts.shape
+    tok = None
+    for t in range(plen):
+        tok, _, cache = serve_step(params, cache,
+                                   prompts[:, t:t + 1], jnp.int32(t))
+    return tok, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="relic_tiny")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = cfg.replace(param_dtype="bfloat16")  # serving layout
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, cache_len)
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    if cfg.family == "encdec":
+        from repro.models.encdec import encode, prefill_cross_cache
+        frames = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.frontend.n_tokens, cfg.d_model)),
+            jnp.bfloat16)
+        cache = prefill_cross_cache(cfg, params, cache,
+                                    encode(cfg, params, frames))
+
+    tok, cache = prefill_via_decode(model, params, cache, prompts, serve_step)
+
+    out = [tok]
+    t0 = time.time()
+    for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
+        tok, _, cache = serve_step(params, cache, tok, jnp.int32(t))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    tps = args.batch * (args.gen - 1) / dt
+    print(f"generated {gen.shape} tokens; {tps:.1f} tok/s "
+          f"({dt/(args.gen-1)*1e3:.1f} ms/step)")
+    print("sample row:", np.asarray(gen[0][:16]))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

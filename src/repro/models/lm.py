@@ -1,0 +1,431 @@
+"""Decoder-only LM assembly: dense / MoE / RWKV-6 / Zamba2-hybrid families.
+
+Layers are **scanned** (`lax.scan` over stacked params) so that HLO size and
+compile time are O(1) in depth — required for 126-layer dry-runs — with a
+configurable remat policy. Decode threads per-layer caches through the same
+scans.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as r6
+from repro.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Per-family blocks.  Every block is  (cfg, params, x, **kw) -> (x, aux)
+# and has a decode twin  (cfg, params, x, cache, pos) -> (x, cache, aux).
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attention(cfg, k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, hd),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, k2, cfg.d_model, cfg.d_ff),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attention(cfg, k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, hd),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "moe": moe_mod.init_moe(cfg, k2),
+        }
+    if cfg.family == "ssm":  # rwkv6
+        return {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "rwkv": r6.init_rwkv_time_mix(cfg, k1),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "cmix": r6.init_rwkv_channel_mix(cfg, k2),
+        }
+    if cfg.family == "hybrid":  # zamba2 mamba layer
+        return {
+            "ln": L.init_norm(cfg, cfg.d_model),
+            "ssm": m2.init_mamba2(cfg, k1),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_shared_attn(cfg: ModelConfig, key):
+    """Zamba2's shared transformer block (one param set, applied periodically)."""
+    hd = cfg.resolved_head_dim
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": attn.init_attention(cfg, k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, hd),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(cfg, k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def block_fwd(cfg: ModelConfig, p, x, *, prefix_len=None):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm"):
+        x = x + attn.self_attention(cfg, p["attn"], L.norm(cfg, p["ln1"], x),
+                                    causal=True, prefix_len=prefix_len)
+        x = x + L.mlp(cfg, p["mlp"], L.norm(cfg, p["ln2"], x))
+    elif cfg.family == "moe":
+        x = x + attn.self_attention(cfg, p["attn"], L.norm(cfg, p["ln1"], x),
+                                    causal=True)
+        y, aux = moe_mod.moe_ffn(cfg, p["moe"], L.norm(cfg, p["ln2"], x))
+        x = x + y
+    elif cfg.family == "ssm":
+        x = x + r6.rwkv_time_mix(cfg, p["rwkv"], L.norm(cfg, p["ln1"], x))
+        x = x + r6.rwkv_channel_mix(cfg, p["cmix"], L.norm(cfg, p["ln2"], x))
+    elif cfg.family == "hybrid":
+        x = x + m2.mamba2_block(cfg, p["ssm"], L.norm(cfg, p["ln"], x))
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+def shared_attn_fwd(cfg: ModelConfig, p, x):
+    x = x + attn.self_attention(cfg, p["attn"], L.norm(cfg, p["ln1"], x),
+                                causal=True)
+    x = x + L.mlp(cfg, p["mlp"], L.norm(cfg, p["ln2"], x))
+    return x
+
+
+# --------------------------------------------------------------- decode twins
+
+def init_block_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"cache": attn.init_decode_cache(cfg, batch, cache_len,
+                                                cfg.n_kv_heads, hd)}
+    if cfg.family == "ssm":
+        h = cfg.d_model // cfg.ssm.head_dim
+        k = cfg.ssm.head_dim
+        return {"cache": {
+            "shift_state": jnp.zeros((batch, cfg.d_model), L.dt(cfg.compute_dtype)),
+            "cmix_shift_state": jnp.zeros((batch, cfg.d_model), L.dt(cfg.compute_dtype)),
+            "wkv_state": jnp.zeros((batch, h, k, k), jnp.float32),
+        }}
+    if cfg.family == "hybrid":
+        d_inner, n_heads, conv_dim = m2._dims(cfg)
+        return {"cache": {
+            "conv_state": jnp.zeros((batch, cfg.ssm.conv_kernel - 1, conv_dim),
+                                    L.dt(cfg.compute_dtype)),
+            "ssm_state": jnp.zeros((batch, n_heads, cfg.ssm.head_dim,
+                                    cfg.ssm.state_dim), jnp.float32),
+        }}
+    raise ValueError(cfg.family)
+
+
+def block_decode(cfg: ModelConfig, p, x, cache, pos):
+    """Returns (x, cache)."""
+    c = cache["cache"]
+    if cfg.family in ("dense", "vlm", "moe"):
+        y, c = attn.decode_self_attention(cfg, p["attn"],
+                                          L.norm(cfg, p["ln1"], x), c, pos)
+        x = x + y
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_ffn(cfg, p["moe"], L.norm(cfg, p["ln2"], x))
+        else:
+            y = L.mlp(cfg, p["mlp"], L.norm(cfg, p["ln2"], x))
+        x = x + y
+    elif cfg.family == "ssm":
+        xn = L.norm(cfg, p["ln1"], x)
+        y, tc = r6.rwkv_time_mix_decode(cfg, p["rwkv"], xn,
+                                        {"shift_state": c["shift_state"],
+                                         "wkv_state": c["wkv_state"]})
+        x = x + y
+        xn2 = L.norm(cfg, p["ln2"], x)
+        y2 = r6.rwkv_channel_mix(cfg, p["cmix"], xn2,
+                                 shift_state=c["cmix_shift_state"])
+        x = x + y2
+        c = {"shift_state": tc["shift_state"], "wkv_state": tc["wkv_state"],
+             "cmix_shift_state": xn2[:, 0]}
+    elif cfg.family == "hybrid":
+        y, c = m2.mamba2_block_decode(cfg, p["ssm"], L.norm(cfg, p["ln"], x), c)
+        x = x + y
+    else:
+        raise ValueError(cfg.family)
+    return x, {"cache": c}
+
+
+def shared_attn_decode(cfg: ModelConfig, p, x, kv_cache, pos):
+    y, kv_cache = attn.decode_self_attention(cfg, p["attn"],
+                                             L.norm(cfg, p["ln1"], x),
+                                             kv_cache, pos)
+    x = x + y
+    x = x + L.mlp(cfg, p["mlp"], L.norm(cfg, p["ln2"], x))
+    return x, kv_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward / decode
+# ---------------------------------------------------------------------------
+
+def unrolled_scan(body, carry, xs):
+    """Python-loop twin of lax.scan (scan_layers=False): exact HLO cost
+    accounting for the dry-run's depth extrapolation."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def maybe_scan(cfg: ModelConfig, body, carry, xs):
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    return unrolled_scan(body, carry, xs)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full": save only block boundaries
+
+
+def _stacked_init(cfg: ModelConfig, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_block(cfg, k))(keys)
+
+
+def init_lm(cfg: ModelConfig, key):
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": L.init_embed(cfg, ke, cfg.vocab_size, cfg.d_model),
+        "layers": _stacked_init(cfg, kl, cfg.n_layers),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_unembed(cfg, kh, cfg.d_model, cfg.vocab_size)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = init_shared_attn(cfg, ks)
+    if cfg.family == "vlm" and cfg.frontend is not None:
+        params["img_proj"] = {
+            "kernel": L._normal(ks, (cfg.frontend.embed_dim, cfg.d_model),
+                                cfg.frontend.embed_dim ** -0.5,
+                                L.dt(cfg.param_dtype))
+        }
+    return params
+
+
+def _scan_blocks(cfg: ModelConfig, layers_p, x, *, prefix_len=None):
+    """Scan the homogeneous block stack; returns (x, aux_sum)."""
+    blk = _remat(cfg, functools.partial(block_fwd, cfg, prefix_len=prefix_len))
+
+    if not cfg.scan_layers:
+        aux = jnp.zeros((), jnp.float32)
+        n = jax.tree.leaves(layers_p)[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], layers_p)
+            x, a = blk(lp, x)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = blk(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), layers_p)
+    return x, aux
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    k = cfg.attn_every
+    full = cfg.n_layers // k if k else 0
+    tail = cfg.n_layers - full * k if k else cfg.n_layers
+    return full, tail
+
+
+def _hybrid_fwd(cfg: ModelConfig, params, x):
+    """Zamba2: groups of `attn_every` mamba layers + shared attention block."""
+    full, tail = _hybrid_groups(cfg)
+    k = cfg.attn_every
+    layers_p = params["layers"]
+    aux = jnp.zeros((), jnp.float32)
+    blk = _remat(cfg, functools.partial(block_fwd, cfg))
+
+    if full:
+        shared = _remat(cfg, functools.partial(shared_attn_fwd, cfg,
+                                               params["shared_attn"]))
+        grouped = jax.tree.map(
+            lambda a: a[: full * k].reshape(full, k, *a.shape[1:]), layers_p
+        )
+
+        def group_body(carry, gp):
+            x, aux = carry
+
+            def inner(c, lp):
+                x_, a_ = c
+                x_, aa = blk(lp, x_)
+                return (x_, a_ + aa), None
+
+            (x, aux), _ = maybe_scan(cfg, inner, (x, aux), gp)
+            x = shared(x)
+            return (x, aux), None
+
+        (x, aux), _ = maybe_scan(cfg, group_body, (x, aux), grouped)
+    if tail:
+        tail_p = jax.tree.map(lambda a: a[full * k:], layers_p)
+        x, a = _scan_blocks(cfg, tail_p, x)
+        aux = aux + a
+    return x, aux
+
+
+def lm_forward(cfg: ModelConfig, params, tokens: jax.Array,
+               *, extra_embed: Optional[jax.Array] = None,
+               prefix_len: Optional[int] = None):
+    """tokens: [B,S] -> (logits [B,S,V] f32, aux_loss)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma convention
+    if extra_embed is not None:
+        proj = extra_embed.astype(x.dtype) @ params["img_proj"]["kernel"].astype(x.dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+    x = shard_act(x, "batch", None, "model", kind="resid")
+
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_fwd(cfg, params, x)
+    else:
+        x, aux = _scan_blocks(cfg, params["layers"], x, prefix_len=prefix_len)
+
+    x = L.norm(cfg, params["final_norm"], x)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = L.unembed(cfg, params.get("lm_head"), x, tied_table=tied)
+    return logits, aux
+
+
+def lm_loss(cfg: ModelConfig, params, batch: dict):
+    """batch: {tokens [B,S], labels [B,S], mask [B,S]} -> (loss, metrics)."""
+    extra = batch.get("patches")
+    logits, aux = lm_forward(
+        cfg, params, batch["tokens"], extra_embed=extra,
+        prefix_len=(extra.shape[1] if extra is not None else None),
+    )
+    if extra is not None:
+        logits = logits[:, extra.shape[1]:]  # loss over text positions only
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    loss = ce + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux,
+               "tokens": mask.sum()}
+    return loss, metrics
+
+
+# --------------------------------------------------------------------- decode
+
+def init_lm_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    one = lambda: init_block_cache(cfg, batch, cache_len)
+    caches = jax.vmap(lambda _: one())(jnp.arange(cfg.n_layers))
+    out = {"layers": caches}
+    if cfg.family == "hybrid" and cfg.attn_every:
+        full, _ = _hybrid_groups(cfg)
+        hd = cfg.resolved_head_dim
+        out["shared_attn"] = jax.vmap(
+            lambda _: attn.init_decode_cache(cfg, batch, cache_len,
+                                             cfg.n_kv_heads, hd)
+        )(jnp.arange(full))
+    return out
+
+
+def lm_decode_step(cfg: ModelConfig, params, cache: dict, tokens: jax.Array,
+                   pos: jax.Array):
+    """One decode step. tokens: [B,1]; pos: [] -> (logits [B,1,V], cache)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    blk = functools.partial(block_decode, cfg)
+
+    if cfg.family == "hybrid":
+        full, tail = _hybrid_groups(cfg)
+        k = cfg.attn_every
+        layers_p, layer_c = params["layers"], cache["layers"]
+        new_cache = {"layers": None, "shared_attn": None}
+        if full:
+            gp = jax.tree.map(lambda a: a[: full * k].reshape(full, k, *a.shape[1:]),
+                              layers_p)
+            gc = jax.tree.map(lambda a: a[: full * k].reshape(full, k, *a.shape[1:]),
+                              layer_c)
+
+            def group_body(x, inp):
+                g_p, g_c, sa_c = inp
+
+                def inner(x_, inp_):
+                    lp, lc = inp_
+                    x_, nc = blk(lp, x_, lc, pos)
+                    return x_, nc
+
+                x, g_c_new = maybe_scan(cfg, inner, x, (g_p, g_c))
+                x, sa_c_new = shared_attn_decode(cfg, params["shared_attn"], x,
+                                                 sa_c, pos)
+                return x, (g_c_new, sa_c_new)
+
+            x, (gc_new, sac_new) = maybe_scan(
+                cfg, group_body, x, (gp, gc, cache["shared_attn"]))
+            gc_new = jax.tree.map(
+                lambda a: a.reshape(full * k, *a.shape[2:]), gc_new)
+        else:
+            gc_new, sac_new = None, cache.get("shared_attn")
+        if tail:
+            tp = jax.tree.map(lambda a: a[full * k:], layers_p)
+            tc = jax.tree.map(lambda a: a[full * k:], layer_c)
+
+            def inner(x_, inp_):
+                lp, lc = inp_
+                x_, nc = blk(lp, x_, lc, pos)
+                return x_, nc
+
+            x, tc_new = maybe_scan(cfg, inner, x, (tp, tc))
+            lc_new = (jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   gc_new, tc_new)
+                      if gc_new is not None else tc_new)
+        else:
+            lc_new = gc_new
+        new_cache = {"layers": lc_new}
+        if sac_new is not None:
+            new_cache["shared_attn"] = sac_new
+    else:
+        def body(x, inp):
+            lp, lc = inp
+            x, nc = blk(lp, x, lc, pos)
+            return x, nc
+
+        x, lc_new = maybe_scan(cfg, body, x,
+                               (params["layers"], cache["layers"]))
+        new_cache = {"layers": lc_new}
+
+    x = L.norm(cfg, params["final_norm"], x)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = L.unembed(cfg, params.get("lm_head"), x, tied_table=tied)
+    return logits, new_cache

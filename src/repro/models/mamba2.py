@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD) block — chunked state-space recurrence with scalar-per-head
+decay, used by the zamba2 hybrid.
+
+The chunked algorithm is the SSD decomposition: intra-chunk terms are a
+masked "attention-like" matmul against C·B^T with cumulative scalar decays;
+inter-chunk state is carried by a `lax.scan` (the same SPSC chunk-state chain
+as rwkv6 — see DESIGN.md §4). Scalar decay keeps the log-space rescaling
+numerically benign at chunk=128.
+
+Decode carries (conv_state [B,conv_dim,k-1], ssm_state [B,H,P,N]) — O(1).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, dt
+from repro.sharding import shard_act
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim  # x, B, C share the conv
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(cfg: ModelConfig, key):
+    pd = dt(cfg.param_dtype)
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    in_dim = 2 * d_inner + 2 * s.state_dim + n_heads  # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    import numpy as np
+
+    dt_init = jnp.asarray(
+        np.exp(
+            np.random.RandomState(0).uniform(
+                np.log(s.dt_min), np.log(s.dt_max), size=(n_heads,)
+            )
+        ),
+        jnp.float32,
+    )
+    return {
+        "w_in": _normal(ks[0], (d, in_dim), d ** -0.5, pd),
+        "w_out": _normal(ks[1], (d_inner, d), d_inner ** -0.5, pd),
+        "conv": _normal(ks[2], (s.conv_kernel, conv_dim), 0.1, pd),
+        "A_log": jnp.zeros((n_heads,), pd),          # A = -exp(A_log) in [-1, ..]
+        "D": jnp.ones((n_heads,), pd),
+        "dt_bias": (dt_init + jnp.log(-jnp.expm1(-dt_init))).astype(pd),
+        "norm_scale": jnp.ones((d_inner,), pd),
+    }
+
+
+def _split_in(cfg: ModelConfig, h: jax.Array):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    z, x, b, c, dt_raw = jnp.split(
+        h, [d_inner, 2 * d_inner, 2 * d_inner + s.state_dim,
+            2 * d_inner + 2 * s.state_dim], axis=-1
+    )
+    return z, x, b, c, dt_raw
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, conv_state=None):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B,T,H,P]   (dt-scaled inputs)
+    a: jax.Array,      # [B,T,H]     log decay (<= 0)
+    b: jax.Array,      # [B,T,N]
+    c: jax.Array,      # [B,T,N]
+    state0: jax.Array, # [B,H,P,N]
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked scalar-decay SSD. Returns (y [B,T,H,P], state [B,H,P,N])."""
+    bb, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    xs = x.reshape(bb, nc, chunk, h, p).astype(jnp.float32)
+    as_ = a.reshape(bb, nc, chunk, h).astype(jnp.float32)
+    bs = b.reshape(bb, nc, chunk, n).astype(jnp.float32)
+    cs = c.reshape(bb, nc, chunk, n).astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))  # inclusive
+
+    def chunk_step(state, inp):
+        xc, ac, bc, cc = inp             # [B,C,H,P],[B,C,H],[B,C,N],[B,C,N]
+        la = jnp.cumsum(ac, axis=1)      # [B,C,H] inclusive
+        # intra-chunk: y_t = sum_{tau<=t} exp(la_t - la_tau) (c_t.b_tau) x_tau
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)          # [B,C,C]
+        decay = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # [B,C,C,H]
+        w = cb[..., None] * decay * mask[None, :, :, None]
+        y = jnp.einsum("btsh,bshp->bthp", w, xc)
+        # inter-chunk: y_t += c_t . (state * exp(la_t))
+        y = y + jnp.einsum(
+            "btn,bhpn,bth->bthp", cc, state, jnp.exp(la)
+        )
+        # state update: S' = exp(la_end) S + sum_tau exp(la_end - la_tau) x_tau b_tau^T
+        la_end = la[:, -1]               # [B,H]
+        dec_end = jnp.exp(la_end[:, None] - la)          # [B,C,H]
+        state = state * jnp.exp(la_end)[..., None, None] + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xc, bc, dec_end
+        )
+        return state, y
+
+    state, ys = jax.lax.scan(
+        chunk_step,
+        state0.astype(jnp.float32),
+        (xs.swapaxes(0, 1), as_.swapaxes(0, 1), bs.swapaxes(0, 1), cs.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).reshape(bb, t, h, p)
+    return y, state
+
+
+def ssd_step(x, a, b, c, state):
+    """Single-token SSD. x: [B,H,P]; a: [B,H]; b/c: [B,N]; state [B,H,P,N]."""
+    xf, bf, cf = (t.astype(jnp.float32) for t in (x, b, c))
+    state = state * jnp.exp(a.astype(jnp.float32))[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xf, bf
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cf)
+    return y.astype(x.dtype), state
+
+
+def _rms(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_block(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Train/prefill path. x: [B,S,D] -> [B,S,D]."""
+    cd = dt(cfg.compute_dtype)
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    h = x.astype(cd) @ p["w_in"].astype(cd)
+    h = shard_act(h, "batch", None, "model")
+    z, xi, bi, ci, dt_raw = _split_in(cfg, h)
+    conv_in = jnp.concatenate([xi, bi, ci], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv"].astype(cd))
+    xi, bi, ci = jnp.split(conv_out, [d_inner, d_inner + s.state_dim], axis=-1)
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt_v          # [B,S,H] log decay
+    xh = xi.reshape(*xi.shape[:-1], n_heads, s.head_dim)
+    x_dt = xh.astype(jnp.float32) * dt_v[..., None]
+
+    if cfg.use_kernels:
+        from repro.kernels import ops  # Pallas fast path (TPU)
+
+        y = ops.ssd(x_dt, a, bi.astype(jnp.float32), ci.astype(jnp.float32),
+                    chunk=s.chunk)
+    else:
+        state0 = jnp.zeros(
+            (x.shape[0], n_heads, s.head_dim, s.state_dim), jnp.float32)
+        y, _ = ssd_chunked(x_dt, a, bi, ci, state0, s.chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], d_inner).astype(cd)
+    y = _rms(y * jax.nn.silu(z), p["norm_scale"])
+    out = y.astype(cd) @ p["w_out"].astype(cd)
+    return shard_act(out, "batch", None, "model", kind="resid")
+
+
+def mamba2_block_decode(cfg: ModelConfig, p, x: jax.Array, cache: dict):
+    """Decode path. x: [B,1,D]; cache: {conv_state [B,K-1,C], ssm_state [B,H,P,N]}."""
+    cd = dt(cfg.compute_dtype)
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    h = x.astype(cd) @ p["w_in"].astype(cd)
+    z, xi, bi, ci, dt_raw = _split_in(cfg, h)
+    conv_in = jnp.concatenate([xi, bi, ci], axis=-1)   # [B,1,C]
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv"].astype(cd), conv_state=cache["conv_state"]
+    )
+    xi, bi, ci = jnp.split(conv_out, [d_inner, d_inner + s.state_dim], axis=-1)
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = (-jnp.exp(p["A_log"].astype(jnp.float32)) * dt_v)[:, 0]   # [B,H]
+    xh = xi[:, 0].reshape(x.shape[0], n_heads, s.head_dim)
+    x_dt = xh.astype(jnp.float32) * dt_v[:, 0, :, None]
+
+    y, state = ssd_step(x_dt, a, bi[:, 0], ci[:, 0],
+                        cache["ssm_state"].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, d_inner).astype(cd)
+    y = _rms(y * jax.nn.silu(z), p["norm_scale"])
+    out = y.astype(cd) @ p["w_out"].astype(cd)
+    return out, {"conv_state": new_conv, "ssm_state": state}

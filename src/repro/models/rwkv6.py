@@ -1,0 +1,229 @@
+"""RWKV-6 "Finch" time-mix and channel-mix blocks (data-dependent decay).
+
+Training/prefill uses the **chunked-parallel form**: within a chunk the
+recurrence is expanded into matmuls against cumulative-decay-rescaled r/k
+(MXU-friendly), and chunk-to-chunk state is carried by a `lax.scan` — the
+chunk state handoff is a literal SPSC chain (chunk t produces the state chunk
+t+1 consumes), which is how the paper's pattern shows up in an attention-free
+arch (DESIGN.md §4).
+
+Numerics: decays are computed in log space; chunk length (cfg.ssm.chunk,
+default 64 for rwkv6) bounds `exp(-logA)` growth. The naive per-step scan in
+``repro.kernels.ref`` is the test oracle.
+
+Decode carries (shift_state [B,D], wkv_state [B,H,Dh,Dh]) — O(1) in context,
+which is why rwkv6 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, dt
+from repro.sharding import shard_act
+
+LORA_RANK = 64
+
+
+def init_rwkv_time_mix(cfg: ModelConfig, key):
+    pd = dt(cfg.param_dtype)
+    d = cfg.d_model
+    da = cfg.ssm.head_dim * (d // cfg.ssm.head_dim)  # attn dim == d_model here
+    ks = jax.random.split(key, 10)
+    p = {
+        "w_r": _normal(ks[0], (d, da), d ** -0.5, pd),
+        "w_k": _normal(ks[1], (d, da), d ** -0.5, pd),
+        "w_v": _normal(ks[2], (d, da), d ** -0.5, pd),
+        "w_g": _normal(ks[3], (d, da), d ** -0.5, pd),
+        "w_o": _normal(ks[4], (da, d), da ** -0.5, pd),
+        # data-dependent decay LoRA:  w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_A": _normal(ks[5], (d, LORA_RANK), d ** -0.5, pd),
+        "decay_B": _normal(ks[6], (LORA_RANK, da), LORA_RANK ** -0.5, pd),
+        "w0": jnp.full((da,), -0.6, pd),   # init decay ~ exp(-exp(-0.6)) ≈ 0.58
+        "u": _normal(ks[7], (da,), 0.3, pd),  # per-channel bonus
+        # token-shift interpolation coefficients (one per stream)
+        "mu": 0.5 * jnp.ones((5, d), pd),     # r,k,v,g,w
+        "ln_scale": jnp.ones((da,), pd),      # per-head groupnorm scale
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, shift_state=None):
+    """Previous-token stream: [B,S,D] -> [B,S,D] shifted by one."""
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def wkv6_chunked(
+    r: jax.Array,       # [B,T,H,K]
+    k: jax.Array,       # [B,T,H,K]
+    v: jax.Array,       # [B,T,H,K]
+    logw: jax.Array,    # [B,T,H,K]  log decay, <= 0
+    u: jax.Array,       # [H,K]
+    state0: jax.Array,  # [B,H,K,K]
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6. Returns (out [B,T,H,K], state [B,H,K,K])."""
+    b, t, h, kk = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+
+    rs = r.reshape(b, n, chunk, h, kk).astype(jnp.float32)
+    ks_ = k.reshape(b, n, chunk, h, kk).astype(jnp.float32)
+    vs = v.reshape(b, n, chunk, h, kk).astype(jnp.float32)
+    lw = logw.reshape(b, n, chunk, h, kk).astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)  # strict
+    eye = jnp.eye(chunk, dtype=jnp.float32)
+
+    def chunk_step(state, inp):
+        rc, kc, vc, lwc = inp  # [B,C,H,K]
+        la = jnp.cumsum(lwc, axis=1)            # inclusive cumulative log decay
+        la_prev = la - lwc                       # decay up to t-1
+        r_dec = rc * jnp.exp(la_prev)            # rescaled receptance (<= |r|)
+        # intra-chunk pairwise scores, numerically exact: for kept (strictly
+        # causal) pairs the decay exponent la_prev_t - la_tau <= 0, so
+        # clamping at 0 before exp changes nothing — it only de-NaNs the
+        # masked upper triangle (which would otherwise overflow for strong
+        # decays). [B,C,C,H,K] is bounded by the chunk size (<=64).
+        diff = jnp.minimum(la_prev[:, :, None] - la[:, None, :], 0.0)
+        scores = jnp.einsum("bthk,bshk,btshk->bhts", rc, kc, jnp.exp(diff))
+        scores = scores * causal[None, None]
+        diag = jnp.einsum("bthk,hk,bthk->bht", rc, u.astype(jnp.float32), kc)
+        scores = scores + diag[..., None] * eye[None, None]
+        out = jnp.einsum("bhts,bshk->bthk", scores, vc)
+        # inter-chunk: contribution from the carried state
+        out = out + jnp.einsum("bthk,bhkj->bthj", r_dec, state)
+        # state update to the chunk end
+        total = la[:, -1]                        # [B,H,K]
+        k_fut = kc * jnp.exp(total[:, None] - la)  # decay from t to chunk end
+        state = state * jnp.exp(total)[..., None] + jnp.einsum(
+            "bthk,bthj->bhkj", k_fut, vc
+        )
+        return state, out
+
+    state, outs = jax.lax.scan(
+        chunk_step,
+        state0.astype(jnp.float32),
+        (rs.swapaxes(0, 1), ks_.swapaxes(0, 1), vs.swapaxes(0, 1), lw.swapaxes(0, 1)),
+    )
+    out = outs.swapaxes(0, 1).reshape(b, t, h, kk)
+    return out.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, logw, u, state):
+    """Single-token recurrence (decode). r/k/v/logw: [B,H,K]; state [B,H,K,K]."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = jnp.einsum("bhk,bhj->bhkj", kf, vf)
+    out = jnp.einsum("bhk,bhkj->bhj", rf, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = state * w[..., None] + kv
+    return out.astype(r.dtype), state
+
+
+def _project_streams(cfg: ModelConfig, p, x, prev):
+    cd = dt(cfg.compute_dtype)
+    h = cfg.d_model // cfg.ssm.head_dim
+    k_dim = cfg.ssm.head_dim
+
+    def heads(y):
+        return y.reshape(*y.shape[:-1], h, k_dim)
+
+    mu = p["mu"].astype(jnp.float32)
+    xs = [_mix(x, prev, mu[i]).astype(cd) for i in range(5)]
+    r = heads(xs[0] @ p["w_r"].astype(cd))
+    k = heads(xs[1] @ p["w_k"].astype(cd))
+    v = heads(xs[2] @ p["w_v"].astype(cd))
+    g = jax.nn.silu(xs[3] @ p["w_g"].astype(cd))
+    lora = jnp.tanh(xs[4].astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+    logw = -jnp.exp(
+        p["w0"].astype(jnp.float32) + lora @ p["decay_B"].astype(jnp.float32)
+    )
+    logw = heads(logw)
+    return r, k, v, g, logw
+
+
+def _group_norm(o: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-head RMS normalization of wkv output. o: [B,T,H,K]."""
+    of = o.astype(jnp.float32)
+    ms = (of * of).mean(-1, keepdims=True)
+    of = of * jax.lax.rsqrt(ms + 1e-5)
+    return of.reshape(*o.shape[:-2], -1) * scale.astype(jnp.float32)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Train/prefill path. x: [B,S,D]."""
+    cd = dt(cfg.compute_dtype)
+    h = cfg.d_model // cfg.ssm.head_dim
+    prev = _token_shift(x)
+    r, k, v, g, logw = _project_streams(cfg, p, x, prev)
+    u = p["u"].astype(jnp.float32).reshape(h, cfg.ssm.head_dim)
+    if cfg.use_kernels:
+        from repro.kernels import ops  # Pallas fast path (TPU)
+
+        out = ops.wkv6(r, k, v, logw, u, chunk=cfg.ssm.chunk)
+    else:
+        state0 = jnp.zeros(
+            (x.shape[0], h, cfg.ssm.head_dim, cfg.ssm.head_dim), jnp.float32)
+        out, _ = wkv6_chunked(r, k, v, logw, u, state0, cfg.ssm.chunk)
+    out = _group_norm(out, p["ln_scale"]).astype(cd) * g
+    y = out @ p["w_o"].astype(cd)
+    return shard_act(y, "batch", None, "model", kind="resid")
+
+
+def rwkv_time_mix_decode(cfg: ModelConfig, p, x: jax.Array, cache: dict):
+    """Decode path. x: [B,1,D]; cache: {shift_state [B,D], wkv_state [B,H,K,K]}."""
+    cd = dt(cfg.compute_dtype)
+    h = cfg.d_model // cfg.ssm.head_dim
+    prev = cache["shift_state"][:, None, :]
+    r, k, v, g, logw = _project_streams(cfg, p, x, prev)
+    u = p["u"].astype(jnp.float32).reshape(h, cfg.ssm.head_dim)
+    out, state = wkv6_step(
+        r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u,
+        cache["wkv_state"].astype(jnp.float32),
+    )
+    out = _group_norm(out[:, None], p["ln_scale"]).astype(cd) * g
+    y = out @ p["w_o"].astype(cd)
+    new_cache = {"shift_state": x[:, 0], "wkv_state": state}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV FFN)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_channel_mix(cfg: ModelConfig, key):
+    pd = dt(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_k": _normal(k1, (d, f), d ** -0.5, pd),
+        "w_v": _normal(k2, (f, d), f ** -0.5, pd),
+        "w_r": _normal(k3, (d, d), d ** -0.5, pd),
+        "mu": 0.5 * jnp.ones((2, d), pd),  # k, r
+    }
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x: jax.Array, shift_state=None):
+    cd = dt(cfg.compute_dtype)
+    prev = _token_shift(x, shift_state)
+    mu = p["mu"].astype(jnp.float32)
+    xk = _mix(x, prev, mu[0]).astype(cd)
+    xr = _mix(x, prev, mu[1]).astype(cd)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(cd)))
+    k = shard_act(k, "batch", None, "model")
+    r = jax.nn.sigmoid(xr @ p["w_r"].astype(cd))
+    y = r * (k @ p["w_v"].astype(cd))
+    return shard_act(y, "batch", None, "model", kind="resid")

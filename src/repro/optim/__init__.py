@@ -1,0 +1,14 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptConfig,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    schedule,
+)
+from repro.optim.adafactor import (  # noqa: F401
+    AdafactorConfig,
+    adafactor_update,
+    init_adafactor_state,
+    state_bytes,
+)

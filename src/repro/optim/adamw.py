@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and a
+warmup+cosine schedule. State is a plain dict mirroring the param tree so the
+sharding rules in `repro.sharding` apply to it verbatim (ZeRO: optimizer
+state inherits every param's 2D shard)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False   # int8+error-feedback gradient compression
+    grad_accum: int = 1            # microbatches per optimizer step
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(oc.warmup_steps, 1)  # step 0 trains
+    t = (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.peak_lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(oc: OptConfig, grads, opt_state: dict, params, step: jax.Array):
+    """Returns (new_params, new_opt_state, lr)."""
+    lr = schedule(oc, step)
+    stepf = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - oc.b1 ** stepf
+    bc2 = 1.0 - oc.b2 ** stepf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = oc.b1 * m + (1 - oc.b1) * gf
+        v = oc.b2 * v + (1 - oc.b2) * gf * gf
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["mu"])
+    flat_v = tdef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v}, lr

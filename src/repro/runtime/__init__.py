@@ -1,0 +1,6 @@
+from repro.runtime.fault import (  # noqa: F401
+    ElasticPlan,
+    HeartbeatTracker,
+    StragglerMonitor,
+    plan_elastic_remesh,
+)

@@ -1,0 +1,132 @@
+"""Failure detection, straggler mitigation, and elastic planning.
+
+At 1000+ nodes the failure model is: slow hosts (stragglers) degrade every
+step (synchronous SPMD waits for the slowest); dead hosts stall the job until
+it is re-gauged onto a smaller mesh from the last checkpoint. This module is
+the host-side control plane for both, designed to run identically under
+simulation (tests feed synthetic timings) and in production (hosts report
+real step durations / heartbeats).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class StepStats:
+    median: float
+    mad: float
+    worst_host: int
+    worst_ratio: float
+
+
+class StragglerMonitor:
+    """Robust per-host step-time tracking (median/MAD z-scores).
+
+    A host is flagged when its step time exceeds median + z*1.4826*MAD for
+    `patience` consecutive windows — transient GC/network blips don't trip
+    it, persistent slow HBM/thermal throttling does.
+    """
+
+    def __init__(self, n_hosts: int, window: int = 32, z: float = 4.0,
+                 patience: int = 3):
+        self.n_hosts = n_hosts
+        self.window = window
+        self.z = z
+        self.patience = patience
+        self._hist: List[deque] = [deque(maxlen=window) for _ in range(n_hosts)]
+        self._strikes = [0] * n_hosts
+
+    def record(self, host: int, seconds: float) -> None:
+        self._hist[host].append(seconds)
+
+    def record_step(self, durations: Sequence[float]) -> None:
+        assert len(durations) == self.n_hosts
+        for h, d in enumerate(durations):
+            self.record(h, d)
+
+    def _median(self, xs):
+        s = sorted(xs)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def stats(self) -> Optional[StepStats]:
+        means = [self._median(h) for h in self._hist if len(h)]
+        if len(means) < self.n_hosts:
+            return None
+        med = self._median(means)
+        mad = self._median([abs(m - med) for m in means]) or 1e-9
+        worst = max(range(self.n_hosts), key=lambda h: means[h])
+        return StepStats(median=med, mad=mad, worst_host=worst,
+                         worst_ratio=means[worst] / med)
+
+    def stragglers(self) -> List[int]:
+        st = self.stats()
+        if st is None:
+            return []
+        med, mad = st.median, st.mad
+        out = []
+        for h in range(self.n_hosts):
+            m = self._median(self._hist[h])
+            if m > med + self.z * 1.4826 * mad:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.patience:
+                out.append(h)
+        return out
+
+
+class HeartbeatTracker:
+    """Dead-host detection by heartbeat timeout."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0, clock=time.time):
+        self.timeout = timeout_s
+        self._clock = clock
+        now = clock()
+        self._last: Dict[int, float] = {h: now for h in range(n_hosts)}
+
+    def beat(self, host: int, when: Optional[float] = None) -> None:
+        self._last[host] = self._clock() if when is None else when
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        now = self._clock() if now is None else now
+        return [h for h, t in self._last.items() if now - t > self.timeout]
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_hosts: Tuple[int, ...]
+    restore_step: Optional[int]
+
+
+def plan_elastic_remesh(mesh_shape: Tuple[int, ...], axes: Tuple[str, ...],
+                        dead_hosts: Sequence[int], chips_per_host: int,
+                        restore_step: Optional[int]) -> ElasticPlan:
+    """Shrink the outermost data-ish axis by whole host groups.
+
+    Policy: the model axes ('model', and 'pod' topology) are fixed by the
+    physical wiring; capacity is shed from the 'data' axis in units of hosts
+    (each host contributes chips_per_host chips along 'data'). Training
+    resumes from the last checkpoint resharded onto the new mesh
+    (`repro.checkpoint.elastic_restore`)."""
+    if not dead_hosts:
+        return ElasticPlan(mesh_shape, mesh_shape, axes, (), restore_step)
+    if "data" not in axes:
+        raise ValueError("no data axis to shrink")
+    di = axes.index("data")
+    lost = len(set(dead_hosts))
+    new = list(mesh_shape)
+    # each lost host removes chips_per_host rows from the data axis
+    new[di] = mesh_shape[di] - lost * chips_per_host
+    if new[di] <= 0:
+        raise RuntimeError("not enough surviving capacity for the model axes")
+    return ElasticPlan(tuple(mesh_shape), tuple(new), tuple(axes),
+                       tuple(sorted(set(dead_hosts))), restore_step)

@@ -1,0 +1,4 @@
+"""The paper's fine-grained benchmark tasks (graph kernels + JSON parsing),
+implemented as microsecond-scale JAX kernels."""
+
+from repro.tasks import graph, jsonparse  # noqa: F401

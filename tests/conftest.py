@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — unit/smoke tests see
+the real single CPU device; multi-device SPMD tests spawn subprocesses with
+--xla_force_host_platform_device_count set (see test_distributed.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

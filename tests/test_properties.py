@@ -1,0 +1,136 @@
+"""Cross-cutting property tests on system invariants (hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.launch.steps import make_train_state, make_train_step
+from repro.models import build_model
+from repro.models.attention import attention_chunked, attention_full
+from repro.models.layers import apply_rope
+from repro.optim import OptConfig
+
+
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]))
+@settings(deadline=None, max_examples=20)
+def test_rope_preserves_norms_and_relative_angles(seed, dh):
+    """RoPE is a rotation: per-pair norms are invariant, and q·k depends only
+    on relative position."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 4, 1, dh)), jnp.float32)
+    pos = jnp.asarray([[3, 7, 11, 20]], jnp.int32)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.asarray([[pq]]), 10_000.0)
+        kr = apply_rope(k, jnp.asarray([[pk]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3  # same offset
+    assert abs(dot_at(9, 2) - dot_at(59, 52)) < 1e-3
+
+
+@given(st.integers(0, 10_000))
+@settings(deadline=None, max_examples=15)
+def test_causal_attention_ignores_future(seed):
+    """Output at position t is unchanged by edits to tokens > t."""
+    rng = np.random.default_rng(seed)
+    b, s, h, d = 1, 64, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    t = int(rng.integers(8, 48))
+    k2 = k.at[:, t + 1:].set(jnp.asarray(rng.normal(size=(b, s - t - 1, h, d)),
+                                         jnp.float32))
+    v2 = v.at[:, t + 1:].set(jnp.asarray(rng.normal(size=(b, s - t - 1, h, d)),
+                                         jnp.float32))
+    for fn in (
+        lambda q, k, v: attention_full(q, k, v, causal=True),
+        lambda q, k, v: attention_chunked(q, k, v, causal=True, chunk_q=16,
+                                          chunk_k=16, causal_skip=True),
+    ):
+        a = fn(q, k, v)[:, : t + 1]
+        b_ = fn(q, k2, v2)[:, : t + 1]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_compressed_training_tracks_uncompressed():
+    """EF-compressed gradient training stays close to exact training."""
+    cfg = get_config("relic_tiny", smoke=True)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "mask": jnp.ones((4, 32), jnp.float32),
+    }
+    losses = {}
+    for compress in (False, True):
+        oc = OptConfig(warmup_steps=2, total_steps=30, compress_grads=compress)
+        state = make_train_state(model, jax.random.PRNGKey(0), oc)
+        step = jax.jit(make_train_step(model, oc))
+        for _ in range(15):
+            state, m = step(state, batch)
+        losses[compress] = float(m["loss"])
+    # both train (below ~ln(512)=6.24 init), and track each other closely
+    assert losses[False] < 5.0 and losses[True] < 5.0, losses
+    assert abs(losses[True] - losses[False]) < 0.25, losses
+
+
+def test_grad_accum_matches_full_batch():
+    """Microbatched accumulation reproduces the full-batch gradient."""
+    cfg = get_config("relic_tiny", smoke=True)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32),
+        "mask": jnp.ones((8, 32), jnp.float32),
+    }
+    gnorms = {}
+    for ga in (1, 4):
+        oc = OptConfig(warmup_steps=2, total_steps=10, grad_accum=ga)
+        state = make_train_state(model, jax.random.PRNGKey(0), oc)
+        step = jax.jit(make_train_step(model, oc))
+        _, m = step(state, batch)
+        gnorms[ga] = float(m["grad_norm"])
+    assert abs(gnorms[1] - gnorms[4]) / gnorms[1] < 0.02, gnorms
+
+
+def test_moe_aux_loss_balances_router():
+    """Training with the aux loss must flatten expert assignment entropy."""
+    cfg = get_config("llama4_maverick_400b_a17b", smoke=True)
+    cfg = cfg.replace(n_layers=1)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+        "mask": jnp.ones((4, 64), jnp.float32),
+    }
+    oc = OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=60)
+    state = make_train_state(model, jax.random.PRNGKey(0), oc)
+    step = jax.jit(make_train_step(model, oc))
+    aux0 = None
+    for i in range(30):
+        state, m = step(state, batch)
+        if aux0 is None:
+            aux0 = float(m["aux"])
+    assert float(m["aux"]) <= aux0 * 1.05, (aux0, float(m["aux"]))

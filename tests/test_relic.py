@@ -1,0 +1,149 @@
+"""Relic host runtime + SPSC ring semantics (paper §VI)."""
+
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.relic import Relic, RelicUsageError
+from repro.core.spsc import SpscRing
+
+
+# ---------------------------------------------------------------- SPSC ring
+
+@given(st.lists(st.integers(), max_size=300),
+       st.integers(min_value=1, max_value=64))
+@settings(deadline=None, max_examples=50)
+def test_spsc_fifo_property(items, capacity):
+    """Single-threaded FIFO + capacity invariants for any push/pop schedule."""
+    ring = SpscRing(capacity)
+    out = []
+    pending = list(items)
+    while pending or len(ring):
+        pushed = False
+        if pending and ring.push(pending[0]):
+            pending.pop(0)
+            pushed = True
+        if not pushed or len(ring) > capacity // 2:
+            got = ring.pop()
+            if got is not None:
+                out.append(got)
+        assert len(ring) <= capacity
+    assert out == items
+
+
+def test_spsc_full_empty():
+    ring = SpscRing(2)
+    assert ring.pop() is None
+    assert ring.push(1) and ring.push(2)
+    assert not ring.push(3)           # full
+    assert ring.pop() == 1
+    assert ring.push(3)
+    assert [ring.pop(), ring.pop()] == [2, 3]
+    assert ring.empty()
+
+
+def test_spsc_threaded_fifo():
+    ring = SpscRing(8)
+    n = 5000
+    out = []
+
+    def consumer():
+        while len(out) < n:
+            item = ring.pop()
+            if item is not None:
+                out.append(item)
+            else:
+                time.sleep(0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    i = 0
+    while i < n:
+        if ring.push(i):
+            i += 1
+        else:
+            time.sleep(0)
+    t.join(10)
+    assert out == list(range(n))
+
+
+# ------------------------------------------------------------ Relic runtime
+
+def test_relic_runs_tasks_in_order():
+    out = []
+    with Relic() as rt:
+        rt.wake_up_hint()
+        for i in range(500):
+            rt.submit(out.append, i)
+        rt.wait()
+    assert out == list(range(500))  # single consumer => submit order
+
+
+def test_relic_rejects_assistant_submit():
+    """Paper §VI-A: the assistant thread cannot submit (no recursion)."""
+    errs = []
+    with Relic(start_awake=True) as rt:
+        def recursive():
+            try:
+                rt.submit(lambda: None)
+            except RelicUsageError as e:
+                errs.append(e)
+
+        rt.submit(recursive)
+        rt.wait()
+    assert len(errs) == 1
+
+
+def test_relic_rejects_foreign_thread():
+    with Relic(start_awake=True) as rt:
+        rt.submit(lambda: None)
+        rt.wait()
+        err = []
+
+        def other():
+            try:
+                rt.submit(lambda: None)
+            except RelicUsageError as e:
+                err.append(e)
+
+        t = threading.Thread(target=other)
+        t.start()
+        t.join()
+        assert err
+
+
+def test_relic_task_error_surfaces_at_wait():
+    with Relic(start_awake=True) as rt:
+        rt.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            rt.wait()
+
+
+def test_relic_sleep_hint_parks_assistant():
+    rt = Relic(start_awake=False).start()   # asleep until hinted
+    time.sleep(0.05)
+    parked = rt.stats.parks
+    assert parked >= 1
+    spins_asleep = rt.stats.assistant_empty_spins
+    time.sleep(0.05)
+    # parked assistant must not burn spin iterations
+    assert rt.stats.assistant_empty_spins == spins_asleep
+    rt.wake_up_hint()
+    out = []
+    rt.submit(out.append, 1)
+    rt.wait()
+    assert out == [1]
+    rt.shutdown()
+
+
+def test_relic_backpressure_capacity():
+    """Producer busy-waits when the bounded ring is full, never drops."""
+    out = []
+    with Relic(capacity=4, start_awake=True) as rt:
+        for i in range(100):
+            rt.submit(lambda i=i: (time.sleep(0.0005), out.append(i)))
+        rt.wait()
+    assert out == list(range(100))
+    assert rt.stats.submitted == rt.stats.completed == 100

@@ -1,0 +1,263 @@
+"""Checkpointing, data pipeline, compression, and fault-tolerance units."""
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, PrefetchPipeline, SyntheticLM
+from repro.optim.compression import (
+    compress_with_feedback, dequantize, init_residual, quantize)
+from repro.runtime import (
+    HeartbeatTracker, StragglerMonitor, plan_elastic_remesh)
+
+
+# ------------------------------------------------------------- checkpointing
+
+def _state(rng):
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16)},
+        "opt": {"mu": {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}},
+        "step": jnp.int32(3),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    state = _state(rng)
+    mgr = CheckpointManager(tmp_path, async_=False)
+    mgr.save(state, 10)
+    restored, step = mgr.restore(state)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_retention(tmp_path, rng):
+    state = _state(rng)
+    mgr = CheckpointManager(tmp_path, keep=2, async_=True)
+    for s in (1, 2, 3, 4):
+        mgr.save(state, s)
+    mgr.wait()
+    steps = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert steps == ["step_00000003", "step_00000004"]
+    assert mgr.latest_step() == 4
+    mgr.close()
+
+
+def test_checkpoint_partial_write_is_not_restorable(tmp_path, rng):
+    state = _state(rng)
+    mgr = CheckpointManager(tmp_path, async_=False)
+    mgr.save(state, 1)
+    # simulate a crash mid-write of step 2: tmp dir without manifest rename
+    broken = Path(tmp_path) / "step_00000002.tmp"
+    broken.mkdir()
+    (broken / "garbage.npy").write_bytes(b"xx")
+    assert mgr.latest_step() == 1
+    restored, step = mgr.restore(state)
+    assert step == 1
+
+
+def test_checkpoint_resume_determinism(tmp_path, rng):
+    """Training N steps straight == training k, restoring, training N-k."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_state, make_train_step
+    from repro.models import build_model
+    from repro.optim import OptConfig
+
+    cfg = get_config("relic_tiny", smoke=True)
+    model = build_model(cfg)
+    oc = OptConfig(warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(make_train_step(model, oc))
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=cfg.vocab_size)
+    src = SyntheticLM(dc)
+
+    def run(state, lo, hi):
+        for i in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+            state, m = step_fn(state, batch)
+        return state, m
+
+    s0 = make_train_state(model, jax.random.PRNGKey(0))
+    straight, m_straight = run(s0, 0, 6)
+
+    s1 = make_train_state(model, jax.random.PRNGKey(0))
+    s1, _ = run(s1, 0, 3)
+    mgr = CheckpointManager(tmp_path, async_=False)
+    mgr.save(s1, 3)
+    s2, _ = mgr.restore(s1)
+    resumed, m_resumed = run(s2, 3, 6)
+    np.testing.assert_allclose(float(m_straight["loss"]),
+                               float(m_resumed["loss"]), rtol=1e-5)
+
+
+# ------------------------------------------------------------- data pipeline
+
+def test_pipeline_deterministic_restart():
+    dc = DataConfig(seq_len=16, global_batch=4, vocab_size=100, prefetch=4)
+    src = SyntheticLM(dc)
+    p1 = PrefetchPipeline(src, dc).start()
+    first = [p1.next_batch()["tokens"] for _ in range(5)]
+    p1.stop()
+    # restart at index 3 must replay batches 3, 4, ...
+    p2 = PrefetchPipeline(src, dc, start_index=3).start()
+    replay = [p2.next_batch()["tokens"] for _ in range(2)]
+    p2.stop()
+    np.testing.assert_array_equal(first[3], replay[0])
+    np.testing.assert_array_equal(first[4], replay[1])
+
+
+def test_pipeline_shards_disjoint_batches():
+    dc0 = DataConfig(seq_len=16, global_batch=8, vocab_size=1000,
+                     shard=0, num_shards=2)
+    dc1 = DataConfig(seq_len=16, global_batch=8, vocab_size=1000,
+                     shard=1, num_shards=2)
+    b0 = SyntheticLM(dc0).batch(0)
+    b1 = SyntheticLM(dc1).batch(0)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_pipeline_keeps_prefetch_depth():
+    dc = DataConfig(seq_len=8, global_batch=2, vocab_size=50, prefetch=4)
+    p = PrefetchPipeline(SyntheticLM(dc), dc).start()
+    time.sleep(0.2)
+    # assistant should have filled the ring
+    assert len(p._ring) >= 1
+    for _ in range(10):
+        p.next_batch()
+    p.stop()
+
+
+# -------------------------------------------------------------- compression
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4096))
+@settings(deadline=None, max_examples=30)
+def test_quantize_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, s, size = quantize(x)
+    back = dequantize(q, s, size, x.shape)
+    # per-block error bounded by half a quantization step
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % 256)).reshape(-1, 256))
+    step = np.abs(blocks).max(1) / 127.0
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    err_blocks = np.pad(err, (0, (-n) % 256)).reshape(-1, 256)
+    assert (err_blocks.max(1) <= step / 2 + 1e-7).all()
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of EF-compressed grads converges to the sum of raw grads."""
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(128,)), jnp.float32)}
+    res = init_residual(grads)
+    total_c = jnp.zeros((128,))
+    steps = 50
+    for _ in range(steps):
+        c, res = compress_with_feedback(grads, res)
+        total_c = total_c + c["w"]
+    total_raw = grads["w"] * steps
+    # residual carry-over keeps the long-run average unbiased
+    err = float(jnp.abs(total_c + res["w"] - total_raw).max())
+    assert err < 1e-3, err
+
+
+# ---------------------------------------------------------------- adafactor
+
+def test_adafactor_trains_and_saves_memory():
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import (AdafactorConfig, OptConfig, adafactor_update,
+                             clip_by_global_norm, init_adafactor_state,
+                             schedule, state_bytes)
+
+    cfg = get_config("relic_tiny", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "mask": jnp.ones((4, 32), jnp.float32),
+    }
+    ac = AdafactorConfig()
+    oc = OptConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40)
+    opt = init_adafactor_state(params)
+
+    @jax.jit
+    def step(params, opt, i):
+        (loss, _), g = jax.value_and_grad(model.loss, has_aux=True)(params,
+                                                                    batch)
+        g, _ = clip_by_global_norm(g, 1.0)
+        params, opt = adafactor_update(ac, g, opt, params, i, schedule(oc, i))
+        return params, opt, loss
+
+    l0 = None
+    for i in range(20):
+        params, opt, loss = step(params, opt, jnp.int32(i))
+        l0 = l0 if l0 is not None else float(loss)
+    assert float(loss) < l0 - 0.5, (l0, float(loss))
+
+    # factored state is far smaller than Adam's
+    adam_b = state_bytes(params, adam=True)
+    af_b = state_bytes(params, adam=False)
+    assert af_b < adam_b / 20, (adam_b, af_b)
+
+
+# ------------------------------------------------------------------- faults
+
+def test_straggler_monitor_flags_persistent_slow_host():
+    mon = StragglerMonitor(n_hosts=8, window=16, z=4.0, patience=3)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for step in range(40):
+        d = 0.1 + rng.normal(0, 0.002, size=8)
+        if step >= 10:
+            d[3] = 0.25  # host 3 goes slow
+        mon.record_step(d.tolist())
+        flagged = mon.stragglers()
+    assert flagged == [3]
+    st_ = mon.stats()
+    assert st_.worst_host == 3 and st_.worst_ratio > 2
+
+
+def test_straggler_monitor_ignores_transients():
+    mon = StragglerMonitor(n_hosts=4, window=16, patience=3)
+    rng = np.random.default_rng(1)
+    for step in range(30):
+        d = (0.1 + rng.normal(0, 0.002, size=4))
+        if step == 12:
+            d[2] = 1.0  # one-off GC pause
+        mon.record_step(d.tolist())
+    assert mon.stragglers() == []
+
+
+def test_heartbeat_dead_detection():
+    t = {"now": 1000.0}
+    hb = HeartbeatTracker(n_hosts=4, timeout_s=30, clock=lambda: t["now"])
+    t["now"] = 1020.0
+    for h in (0, 1, 3):
+        hb.beat(h)
+    t["now"] = 1045.0
+    assert hb.dead() == [2]
+
+
+def test_elastic_plan_shrinks_data_axis():
+    plan = plan_elastic_remesh((16, 16), ("data", "model"), dead_hosts=[5],
+                               chips_per_host=4, restore_step=1200)
+    assert plan.new_shape == (12, 16)
+    assert plan.dropped_hosts == (5,)
+    with pytest.raises(RuntimeError):
+        plan_elastic_remesh((4, 16), ("data", "model"), dead_hosts=[0],
+                            chips_per_host=4, restore_step=None)

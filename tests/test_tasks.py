@@ -1,0 +1,180 @@
+"""Paper benchmark tasks (§IV): graph kernels + JSON parse vs oracles."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.tasks import graph, jsonparse
+
+
+@pytest.fixture(scope="module")
+def g():
+    adj, w = graph.kronecker_graph()
+    return np.asarray(adj), np.asarray(w), adj, w
+
+
+def _bfs_oracle(A, src=0):
+    n = A.shape[0]
+    dist = -np.ones(n, np.int64)
+    dist[src] = 0
+    frontier = [src]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in np.nonzero(A[u])[0]:
+                if dist[v] < 0:
+                    dist[v] = dist[u] + 1
+                    nxt.append(v)
+        frontier = nxt
+    return dist
+
+
+def test_paper_input_shape(g):
+    A, _, adj, _ = g
+    assert A.shape == (32, 32)
+    assert graph.n_edges(adj) == 157  # the paper's generated Kronecker input
+
+
+def test_bfs_matches_oracle(g):
+    A, _, adj, _ = g
+    np.testing.assert_array_equal(np.asarray(graph.bfs(adj, 0)),
+                                  _bfs_oracle(A, 0))
+
+
+def test_cc_matches_reachability(g):
+    A, _, adj, _ = g
+    labels = np.asarray(graph.connected_components(adj))
+    n = A.shape[0]
+    for s in range(n):
+        reach = _bfs_oracle(A, s) >= 0
+        same = labels == labels[s]
+        np.testing.assert_array_equal(same, reach)
+
+
+def test_pagerank_properties(g):
+    _, _, adj, _ = g
+    pr = np.asarray(graph.pagerank(adj))
+    assert (pr > 0).all() and pr.sum() <= 1.0 + 1e-5
+
+
+def test_sssp_matches_dijkstra(g):
+    A, W, adj, w = g
+    import heapq
+    n = A.shape[0]
+    dist = np.full(n, np.inf)
+    dist[0] = 0
+    pq = [(0.0, 0)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v in np.nonzero(A[u])[0]:
+            nd = d + W[u, v]
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    got = np.asarray(graph.sssp(w, 0))
+    mask = np.isfinite(dist)
+    np.testing.assert_allclose(got[mask], dist[mask])
+    assert (got[~mask] >= 1e8).all()
+
+
+def test_triangles_match_trace(g):
+    A, _, adj, _ = g
+    assert float(graph.triangle_count(adj)) == np.trace(A @ A @ A) / 6
+
+
+def test_bc_matches_brandes_oracle(g):
+    A, _, adj, _ = g
+    # plain python Brandes from source 0
+    n = A.shape[0]
+    import collections
+    sigma = np.zeros(n); sigma[0] = 1
+    dist = -np.ones(n, np.int64); dist[0] = 0
+    order = [0]
+    q = collections.deque([0])
+    while q:
+        u = q.popleft()
+        for v in np.nonzero(A[u])[0]:
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(v); order.append(v)
+            if dist[v] == dist[u] + 1:
+                sigma[v] += sigma[u]
+    delta = np.zeros(n)
+    for u in reversed(order):
+        for v in np.nonzero(A[u])[0]:
+            if dist[v] == dist[u] + 1 and sigma[v] > 0:
+                delta[u] += sigma[u] / sigma[v] * (1 + delta[v])
+    delta[0] = 0
+    got = np.asarray(graph.betweenness_centrality(adj, 0))
+    np.testing.assert_allclose(got, delta, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=20)
+def test_bfs_property_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 24))
+    A = (rng.random((n, n)) < 0.2).astype(np.float32)
+    A = np.maximum(A, A.T)
+    np.fill_diagonal(A, 0)
+    got = np.asarray(graph.bfs(jnp.asarray(A), 0, max_iter=n + 1))
+    np.testing.assert_array_equal(got, _bfs_oracle(A, 0))
+
+
+# ------------------------------------------------------------------- JSON
+
+def test_json_widget_structural_counts():
+    buf = jsonparse.to_bytes(jsonparse.WIDGET_JSON)
+    s, depth, ok = jsonparse.parse_structural(buf)
+    want = jsonparse.oracle_counts(jsonparse.WIDGET_JSON)
+    assert int(s.sum()) == want["structural"]
+    assert int(depth.max()) == want["max_depth"]
+    assert bool(ok)
+
+
+def test_json_detects_imbalance():
+    bad = jsonparse.WIDGET_JSON[:-1]  # drop the final brace
+    _, _, ok = jsonparse.parse_structural(jsonparse.to_bytes(bad))
+    assert not bool(ok)
+
+
+def test_json_escaped_quotes_and_braces_in_strings():
+    doc = json.dumps({"a": 'he said "hi\\" {not a brace}', "b": [1, 2]})
+    buf = jsonparse.to_bytes(doc)
+    s, depth, ok = jsonparse.parse_structural(buf)
+    want = jsonparse.oracle_counts(doc)
+    assert bool(ok)
+    assert int(s.sum()) == want["structural"]
+    assert int(depth.max()) == want["max_depth"]
+
+
+@st.composite
+def json_values(draw, depth=0):
+    if depth > 2:
+        return draw(st.integers(-5, 5))
+    return draw(st.one_of(
+        st.integers(-100, 100),
+        st.booleans(),
+        st.text(alphabet=st.characters(codec="ascii",
+                                       exclude_characters="\x00"),
+                max_size=12),
+        st.lists(json_values(depth=depth + 1), max_size=4),
+        st.dictionaries(st.text(alphabet="abcdef", min_size=1, max_size=4),
+                        json_values(depth=depth + 1), max_size=4),
+    ))
+
+
+@given(json_values())
+@settings(deadline=None, max_examples=40)
+def test_json_property_valid_docs_validate(value):
+    doc = json.dumps(value)
+    buf = jsonparse.to_bytes(doc)
+    s, depth, ok = jsonparse.parse_structural(buf)
+    want = jsonparse.oracle_counts(doc)
+    assert bool(ok)
+    assert int(s.sum()) == want["structural"]
