@@ -8,6 +8,10 @@
           developer would keep the serial version)
   spsc  — raw scheduling overhead: ns per submit+wait round-trip per
           structure (the mechanism behind the figures)
+  wavefront — the GAP kernel task graph executed end-to-end over every
+          substrate in the repro.core.schedulers registry via
+          repro.tasks.graph.run_wavefronts (dependency-aware scheduling,
+          not just the two-task microbenchmark)
   roofline — summary of the dry-run artifacts, if present
 
 Output: ``name,us_per_call,derived`` CSV per line.
@@ -93,6 +97,36 @@ def run_spsc(iters: int):
     return res
 
 
+def run_wavefront(iters: int):
+    """GAP task graph over every registered substrate (same graph, same
+    dependency structure — only the scheduling substrate varies)."""
+    from repro.core.schedulers import available_schedulers, make_scheduler
+    from repro.tasks.graph import gap_task_graph, kronecker_graph, run_wavefronts
+
+    adj, w = kronecker_graph()
+    tasks = gap_task_graph(adj, w)
+    # compile/warm every kernel once outside the timed region
+    with make_scheduler("serial") as warm:
+        baseline = run_wavefronts(tasks, warm)
+
+    iters = max(iters // 10, 10)
+    print("# wavefront: GAP task graph per substrate (µs per full graph)")
+    print("name,us_per_call,derived")
+    times = {}
+    for name in available_schedulers():
+        with make_scheduler(name) as sched:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                res = run_wavefronts(tasks, sched)
+            us = (time.perf_counter() - t0) / iters * 1e6
+        assert res["summary"] == baseline["summary"], name
+        times[name] = us
+    for name, us in times.items():
+        sp = times["serial"] / us
+        print(f"wavefront/{name},{us:.2f},speedup={sp:.3f}")
+    return times
+
+
 def run_roofline():
     from benchmarks.roofline import load_records
 
@@ -117,13 +151,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--only", default="all",
-                    choices=["all", "fig1", "spsc", "roofline"])
+                    choices=["all", "fig1", "spsc", "wavefront", "roofline"])
     args = ap.parse_args()
     t0 = time.time()
     if args.only in ("all", "fig1"):
         run_figures(args.iters)
     if args.only in ("all", "spsc"):
         run_spsc(args.iters)
+    if args.only in ("all", "wavefront"):
+        run_wavefront(args.iters)
     if args.only in ("all", "roofline"):
         run_roofline()
     print(f"# total {time.time() - t0:.1f}s")

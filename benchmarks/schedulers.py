@@ -2,19 +2,25 @@
 
 The paper compares seven task-parallel frameworks scheduling two ~1 µs task
 instances onto the two logical threads of one SMT core. The host-runtime
-translation benchmarks the same *scheduling structures* on this machine:
+translation benchmarks the same *scheduling structures* on this machine.
 
-  serial              — both instances sequentially in the main thread
-                        (the paper's baseline)
-  relic_spsc          — the paper's design: busy-wait SPSC ring, fixed
-                        producer/consumer roles (repro.core.relic)
-  locked_queue_spin   — persistent worker, mutex-protected deque, spin wait
-                        (X-OpenMP-flavoured: lock-based + spinning)
-  locked_queue_condvar— persistent worker, queue.Queue (condvar suspension)
-                        (GNU-OpenMP-flavoured: suspension-based waits)
-  threadpool_futures  — concurrent.futures 2-worker pool
-                        (oneTBB/Taskflow-flavoured: general pool + futures)
-  thread_per_task     — a fresh thread per task (worst-case spawn overhead)
+Every substrate below comes from the ``repro.core.schedulers`` registry —
+this module owns no private worker classes; it only drives library
+substrates through the uniform Scheduler contract (submit partner task,
+run own task, wait). Strategy-name mapping:
+
+  serial              — ``serial``: both instances sequentially in the main
+                        thread (the paper's baseline)
+  relic_spsc          — ``relic``: busy-wait SPSC ring, fixed producer and
+                        consumer roles (the paper's design, §VI)
+  locked_queue_spin   — ``spin``: persistent worker, mutex-protected deque,
+                        spin waits (X-OpenMP-flavoured: lock-based + spin)
+  locked_queue_condvar— ``condvar``: persistent worker, bounded queue with
+                        condvar suspension (GNU-OpenMP-flavoured)
+  threadpool_futures  — ``pool``: general 2-worker pool + futures
+                        (oneTBB/Taskflow-flavoured)
+  thread_per_task     — a fresh thread per task (worst-case spawn overhead;
+                        deliberately not a registered substrate)
   jax_async_stream    — both instances dispatched asynchronously into the
                         XLA stream from one thread, one sync (the device-side
                         two-lane analogue: dispatch lane + compute lane)
@@ -27,89 +33,21 @@ wall-clock per iteration over `iters` iterations after warmup.
 
 from __future__ import annotations
 
-import collections
-import statistics
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import jax
 
-from repro.core.relic import Relic
+from repro.core.schedulers import make_scheduler
 
-
-class _SpinWorker:
-    """Persistent worker: lock-protected deque + spin waits on both sides."""
-
-    def __init__(self):
-        self._dq = collections.deque()
-        self._lock = threading.Lock()
-        self._done = 0
-        self._submitted = 0
-        self._stop = False
-        self._t = threading.Thread(target=self._loop, daemon=True)
-        self._t.start()
-
-    def _loop(self):
-        while not self._stop:
-            item = None
-            with self._lock:
-                if self._dq:
-                    item = self._dq.popleft()
-            if item is None:
-                time.sleep(0)
-                continue
-            item()
-            self._done += 1
-
-    def submit(self, fn):
-        with self._lock:
-            self._dq.append(fn)
-        self._submitted += 1
-
-    def wait(self):
-        while self._done < self._submitted:
-            time.sleep(0)
-
-    def close(self):
-        self._stop = True
-        self._t.join(timeout=2)
-
-
-class _CondvarWorker:
-    """Persistent worker: queue.Queue (condition-variable suspension)."""
-
-    def __init__(self):
-        import queue
-
-        self._q = queue.Queue()
-        self._done = threading.Semaphore(0)
-        self._submitted = 0
-        self._stop = False
-        self._t = threading.Thread(target=self._loop, daemon=True)
-        self._t.start()
-
-    def _loop(self):
-        while True:
-            fn = self._q.get()
-            if fn is None:
-                return
-            fn()
-            self._done.release()
-
-    def submit(self, fn):
-        self._q.put(fn)
-        self._submitted += 1
-
-    def wait(self):
-        for _ in range(self._submitted):
-            self._done.acquire()
-        self._submitted = 0
-
-    def close(self):
-        self._q.put(None)
-        self._t.join(timeout=2)
+# benchmark strategy name -> repro.core.schedulers registry name
+SUBSTRATE_STRATEGIES = {
+    "relic_spsc": "relic",
+    "locked_queue_spin": "spin",
+    "locked_queue_condvar": "condvar",
+    "threadpool_futures": "pool",
+}
 
 
 def _timeit(step: Callable[[], None], iters: int, warmup: int) -> float:
@@ -131,54 +69,32 @@ def bench_strategies(task_a: Callable[[], jax.Array],
     def run_sync(fn):
         fn().block_until_ready()
 
-    # --- serial -----------------------------------------------------------
+    # --- serial baseline ---------------------------------------------------
     out["serial"] = _timeit(lambda: (run_sync(task_a), run_sync(task_b)),
                             iters, warmup)
 
-    # --- relic (busy-wait SPSC, fixed roles) -------------------------------
-    rt = Relic(start_awake=True).start()
+    # --- registry substrates ------------------------------------------------
+    # Fixed-role substrates use the paper's producer-participates pattern
+    # (submit partner task, run own task, wait); the pool keeps its
+    # historical general-pool semantics — BOTH instances handed to the
+    # 2-worker pool, main thread only joining — so the CSV label keeps
+    # measuring the same scheduling structure as before the refactor.
+    for strategy, substrate in SUBSTRATE_STRATEGIES.items():
+        with make_scheduler(substrate) as sched:
+            if substrate == "pool":
+                def step(sched=sched):
+                    sched.submit(run_sync, task_a)
+                    sched.submit(run_sync, task_b)
+                    sched.wait()
+            else:
+                def step(sched=sched):
+                    sched.submit(run_sync, task_b)
+                    run_sync(task_a)
+                    sched.wait()
 
-    def relic_step():
-        rt.submit(run_sync, task_b)
-        run_sync(task_a)
-        rt.wait()
+            out[strategy] = _timeit(step, iters, warmup)
 
-    out["relic_spsc"] = _timeit(relic_step, iters, warmup)
-    rt.shutdown()
-
-    # --- locked queue + spin ------------------------------------------------
-    w = _SpinWorker()
-
-    def spin_step():
-        w.submit(lambda: run_sync(task_b))
-        run_sync(task_a)
-        w.wait()
-
-    out["locked_queue_spin"] = _timeit(spin_step, iters, warmup)
-    w.close()
-
-    # --- locked queue + condvar ---------------------------------------------
-    cw = _CondvarWorker()
-
-    def cv_step():
-        cw.submit(lambda: run_sync(task_b))
-        run_sync(task_a)
-        cw.wait()
-
-    out["locked_queue_condvar"] = _timeit(cv_step, iters, warmup)
-    cw.close()
-
-    # --- thread pool ---------------------------------------------------------
-    with ThreadPoolExecutor(max_workers=2) as pool:
-        def pool_step():
-            fa = pool.submit(run_sync, task_a)
-            fb = pool.submit(run_sync, task_b)
-            fa.result()
-            fb.result()
-
-        out["threadpool_futures"] = _timeit(pool_step, iters, warmup)
-
-    # --- thread per task -------------------------------------------------------
+    # --- thread per task ---------------------------------------------------
     def tpt_step():
         t = threading.Thread(target=run_sync, args=(task_b,))
         t.start()
@@ -187,7 +103,7 @@ def bench_strategies(task_a: Callable[[], jax.Array],
 
     out["thread_per_task"] = _timeit(tpt_step, max(iters // 4, 100), warmup)
 
-    # --- async dispatch into the XLA stream ------------------------------------
+    # --- async dispatch into the XLA stream --------------------------------
     def async_step():
         ra = task_a()
         rb = task_b()
@@ -196,7 +112,7 @@ def bench_strategies(task_a: Callable[[], jax.Array],
 
     out["jax_async_stream"] = _timeit(async_step, iters, warmup)
 
-    # --- fused (one compiled call) ----------------------------------------------
+    # --- fused (one compiled call) -----------------------------------------
     out["fused_vmap"] = _timeit(lambda: run_sync(fused), iters, warmup)
 
     return out

@@ -1,4 +1,5 @@
 """Relic-JAX: fine-grained two-lane task parallelism (Los & Petushkov 2024)
-as a multi-pod JAX training/serving framework. See DESIGN.md."""
+as a multi-pod JAX training/serving framework. See README.md and
+docs/schedulers.md."""
 
 __version__ = "0.1.0"

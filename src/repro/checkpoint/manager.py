@@ -1,6 +1,6 @@
 """Fault-tolerant checkpointing.
 
-Design (1000+ node posture, DESIGN.md §6):
+Design (1000+ node posture, see docs/schedulers.md for the substrate layer):
   * atomic: write into ``step_<n>.tmp`` then ``os.replace`` to ``step_<n>``;
     a manifest is the last file written, so a partially-written checkpoint is
     never restorable.
@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import time
 from pathlib import Path
 from typing import Any, Optional, Tuple
@@ -30,7 +31,7 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.relic import Relic
+from repro.core.schedulers import Scheduler, make_scheduler
 
 MANIFEST = "manifest.json"
 
@@ -54,35 +55,49 @@ def _unflat_into(template, flat: dict):
 
 
 class CheckpointManager:
+    """``scheduler`` selects the host-overlap substrate for async saves: a
+    ``repro.core.schedulers`` registry name or a not-yet-started
+    ``Scheduler`` instance (default: the paper's Relic runtime)."""
+
     def __init__(self, directory: str | Path, keep: int = 3,
-                 async_: bool = True):
+                 async_: bool = True, scheduler: "str | Scheduler" = "relic"):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_ = async_
-        self._relic: Optional[Relic] = None
+        # _write/_gc assume one writer at a time; multi-worker substrates
+        # (pool) could otherwise interleave two saves on the same paths.
+        self._write_lock = threading.Lock()
+        self._sched: Optional[Scheduler] = None
         if async_:
-            self._relic = Relic(start_awake=False).start()
+            if isinstance(scheduler, str):
+                scheduler = make_scheduler(scheduler)
+            self._sched = scheduler.start()
+            self._sched.sleep_hint()   # park until the first save window
 
     # ------------------------------------------------------------------ save
 
     def save(self, state, step: int, *, block: bool = False) -> None:
         host = {k: np.asarray(jax.device_get(v))
                 for k, v in _flat(state).items()}
-        if self._relic is not None:
-            self._relic.wake_up_hint()
-            self._relic.submit(self._write, host, step)
+        if self._sched is not None:
+            self._sched.wake_up_hint()
+            self._sched.submit(self._write, host, step)
             if block:
                 self.wait()
         else:
             self._write(host, step)
 
     def wait(self) -> None:
-        if self._relic is not None:
-            self._relic.wait()
-            self._relic.sleep_hint()
+        if self._sched is not None:
+            self._sched.wait()
+            self._sched.sleep_hint()
 
     def _write(self, host: dict, step: int) -> None:
+        with self._write_lock:
+            self._write_locked(host, step)
+
+    def _write_locked(self, host: dict, step: int) -> None:
         tmp = self.dir / f"step_{step:08d}.tmp"
         final = self.dir / f"step_{step:08d}"
         if tmp.exists():
@@ -150,7 +165,9 @@ class CheckpointManager:
         return _unflat_into(template, out), step
 
     def close(self) -> None:
-        if self._relic is not None:
-            self._relic.wait()
-            self._relic.shutdown()
-            self._relic = None
+        if self._sched is not None:
+            try:
+                self._sched.wait()   # surfaces a pending write error
+            finally:
+                self._sched.close()  # but never leaks the worker thread
+                self._sched = None

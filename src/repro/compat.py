@@ -1,0 +1,64 @@
+"""Version-compat shims over JAX API drift.
+
+Three APIs the repo uses moved between JAX releases: ``jax.make_mesh`` grew
+an ``axis_types=`` keyword (and ``jax.sharding.AxisType`` appeared) after
+0.4.x, ``jax.sharding.AbstractMesh`` changed from a single
+``((name, size), ...)`` shape tuple to separate ``(sizes, names)``
+arguments, and ``shard_map`` was promoted from ``jax.experimental`` to
+``jax.shard_map`` (gaining ``axis_names=``). Every mesh and every
+shard_map in the repo goes through these helpers so the support matrix
+lives in one file.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:  # pre-AxisType JAX: all axes are Auto implicitly
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device-free mesh carrying only axis names/sizes, on any JAX."""
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:  # 0.4.x signature: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict (0.4.x returned a
+    one-element list of per-computation dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` where available, else the 0.4.x experimental one.
+
+    ``axis_names`` (the new API's vma declaration) is forwarded when
+    supported; the experimental version has no vma type system, so there it
+    is dropped and replication checking is disabled for the collective
+    loops it would have described (``check_rep=False``).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kwargs = {} if axis_names is None else {"axis_names": axis_names}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)

@@ -4,6 +4,13 @@ inter-chip ICI rings (collective_matmul)."""
 
 from repro.core.spsc import SpscRing, DEFAULT_CAPACITY
 from repro.core.relic import Relic, RelicStats, RelicUsageError
+from repro.core.schedulers import (
+    Scheduler,
+    SchedulerStats,
+    SchedulerUsageError,
+    available_schedulers,
+    make_scheduler,
+)
 from repro.core.lanes import two_lane_ring, two_lane_ring_db
 from repro.core.pipeline import pipeline_apply, split_stages
 from repro.core import collective_matmul
@@ -14,6 +21,11 @@ __all__ = [
     "Relic",
     "RelicStats",
     "RelicUsageError",
+    "Scheduler",
+    "SchedulerStats",
+    "SchedulerUsageError",
+    "available_schedulers",
+    "make_scheduler",
     "two_lane_ring",
     "two_lane_ring_db",
     "pipeline_apply",

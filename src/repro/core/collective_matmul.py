@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core.lanes import two_lane_ring
 
 
@@ -39,11 +40,15 @@ def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
     (our ring buffers do, after the first ppermute) to start varying."""
     if hasattr(lax, "pvary"):
         return lax.pvary(x, (axis_name,))
-    return lax.pcast(x, (axis_name,), to="varying")  # older spelling
+    if hasattr(lax, "pcast"):
+        return lax.pcast(x, (axis_name,), to="varying")  # older spelling
+    return x  # pre-vma JAX: no replication types, nothing to declare
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)  # pre-0.5 spelling
 
 
 def _axis_index(axis_name: str) -> jax.Array:
@@ -210,7 +215,7 @@ def mlp_ring(cfg_act: str, x: jax.Array, w_gate, w_up, w_down,
         out = matmul_reducescatter(h, wd, axis_name, unroll=unroll)
         return out.reshape(b, s_loc, wd.shape[1]).astype(xl.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(None, axis_name, None), P(None, axis_name),
@@ -239,7 +244,7 @@ def tp_allgather_matmul(
     def local(x, w):
         return fn(x, w, axis_name)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis_name, None), P(None, axis_name)),
@@ -262,7 +267,7 @@ def tp_matmul_reducescatter(
     def local(y, w):
         return fn(y, w, axis_name)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(None, axis_name), P(axis_name, None)),

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(
     stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -100,7 +102,7 @@ def pipeline_apply(
     n_leading = {a.shape[0] for a in jax.tree.leaves(stage_params)}
     assert n_leading == {n_stages}, (n_leading, n_stages)
     in_specs = (jax.tree.map(lambda _: P(axis_name), stage_params), P())
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=P(),
         axis_names={axis_name},
     )(stage_params, x_mb)

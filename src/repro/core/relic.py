@@ -18,7 +18,7 @@ Pallas kernels (see ``repro.kernels.relic_matmul``) and by the ppermute ring
 in ``repro.core.collective_matmul``; this module is the host-scale instance,
 used by the data pipeline and the async checkpoint manager.
 
-CPython note (recorded in DESIGN.md §2): overlap is only real for tasks that
+CPython note (recorded in docs/schedulers.md): overlap is only real for tasks that
 release the GIL (JAX dispatch/compute, NumPy kernels, file I/O). That matches
 the paper's scope — Relic targets *parallelizable sections*, and the hints
 exist precisely because the rest of the application is serial.
@@ -69,7 +69,7 @@ def _default_spin_yield() -> int:
     return 1 if (os.cpu_count() or 1) < 2 + 1 else 64
 
 
-_SPIN_PAUSE_EVERY = _default_spin_yield()
+SPIN_PAUSE_EVERY = _default_spin_yield()
 
 
 class Relic:
@@ -133,19 +133,29 @@ class Relic:
         spins = 0
         while not self._ring.push(task):
             # Producer-side busy wait: bounded ring is the backpressure.
+            if spins == 0:
+                # Hints are advisory (§VI-B): a full ring with a parked
+                # assistant cannot drain, so submission un-parks it. Once
+                # is enough — only this (blocked) thread could re-park it.
+                self._awake.set()
             self.stats.producer_full_spins += 1
             spins += 1
-            if spins % _SPIN_PAUSE_EVERY == 0:
+            if spins % SPIN_PAUSE_EVERY == 0:
                 time.sleep(0)  # the Python analogue of `pause`: yield, no park
 
     def wait(self) -> None:
         """Block (busy-wait) until every submitted task has completed."""
         self._check_main("wait()")
         target = self.stats.submitted
+        if self._completed < target:
+            # Advisory hints must not deadlock the barrier: outstanding
+            # work with a parked assistant un-parks it (callers that want
+            # the assistant parked re-issue sleep_hint() after waiting).
+            self._awake.set()
         spins = 0
         while self._completed < target:
             spins += 1
-            if spins % _SPIN_PAUSE_EVERY == 0:
+            if spins % SPIN_PAUSE_EVERY == 0:
                 time.sleep(0)
         self.stats.completed = self._completed
         if self.stats.last_error is not None:
@@ -187,7 +197,7 @@ class Relic:
                     continue
                 stats.assistant_empty_spins += 1
                 spins += 1
-                if spins % _SPIN_PAUSE_EVERY == 0:
+                if spins % SPIN_PAUSE_EVERY == 0:
                     time.sleep(0)  # `pause`-like: yield the GIL, stay runnable
                 continue
             spins = 0

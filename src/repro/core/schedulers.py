@@ -1,0 +1,503 @@
+"""Swappable host scheduling substrates behind one ``Scheduler`` contract.
+
+The paper's central experiment is a head-to-head comparison of *scheduling
+structures* — Relic's busy-wait SPSC ring against lock-based spinning,
+condition-variable suspension, and general thread pools — on a fixed task
+stream. This module makes those competitors first-class citizens of the
+runtime instead of throwaway benchmark classes, so every consumer (data
+pipeline, async checkpointing, the wavefront task driver, benchmarks, and
+the conformance suite) can swap substrates by name.
+
+Substrate-to-paper-framework mapping (see docs/schedulers.md):
+
+  ==========  =====================================  =======================
+  name        structure                              paper framework flavour
+  ==========  =====================================  =======================
+  serial      run inline on the producer thread      the serial baseline
+  relic       busy-wait SPSC ring, fixed roles       Relic (the paper's §VI)
+  spin        mutex-protected deque + spin waits     X-OpenMP (lock + spin)
+  condvar     bounded queue, condvar suspension      GNU OpenMP (suspension)
+  pool        general thread pool + futures          oneTBB / Taskflow
+  ==========  =====================================  =======================
+
+The observable contract (enforced by tests/test_schedulers_conformance.py):
+
+  * ``start()`` before any ``submit()``; returns ``self``; double-start
+    raises. ``close()`` is idempotent, safe without ``start()``, and drains
+    in-flight tasks before returning.
+  * ``submit(fn, *args, **kwargs)`` enqueues a task; every substrate is
+    bounded by ``capacity`` and backpressures (blocks) when full — tasks
+    are never dropped.
+  * ``wait()`` blocks until every task submitted so far has completed. If
+    any task raised since the last ``wait()``, the first such exception is
+    re-raised there (and cleared); the scheduler stays usable.
+  * ``sleep_hint()`` / ``wake_up_hint()`` are advisory (paper §VI-B): they
+    may park/unpark a spinning worker and are no-ops for substrates that
+    already suspend when idle.
+  * ``stats`` exposes at least ``submitted``, ``completed``,
+    ``task_errors``, and ``last_error``.
+
+``submit()``/``wait()`` are owning-thread-only, mirroring Relic's
+no-recursive-spawn rule (paper §VI-A): a task may not submit more tasks.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.core.relic import SPIN_PAUSE_EVERY, Relic, RelicUsageError
+from repro.core.spsc import DEFAULT_CAPACITY
+
+__all__ = [
+    "Scheduler",
+    "SchedulerStats",
+    "SchedulerUsageError",
+    "SerialScheduler",
+    "RelicScheduler",
+    "SpinQueueScheduler",
+    "CondvarQueueScheduler",
+    "PoolScheduler",
+    "available_schedulers",
+    "make_scheduler",
+    "register_scheduler",
+]
+
+
+class SchedulerUsageError(RuntimeError):
+    """Raised on contract misuse (submit after close, double start, ...)."""
+
+
+# Relic predates this module and raises its own error type; both satisfy
+# the "misuse raises" clause of the contract.
+USAGE_ERRORS = (SchedulerUsageError, RelicUsageError)
+
+
+@dataclass
+class SchedulerStats:
+    """Minimal counter surface every substrate exposes (Relic's superset
+    of these counters in ``RelicStats`` is duck-compatible)."""
+
+    submitted: int = 0
+    completed: int = 0
+    task_errors: int = 0
+    last_error: Optional[BaseException] = field(default=None, repr=False)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Structural type for a host scheduling substrate."""
+
+    def start(self) -> "Scheduler": ...
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None: ...
+    def wait(self) -> None: ...
+    def sleep_hint(self) -> None: ...
+    def wake_up_hint(self) -> None: ...
+    def close(self) -> None: ...
+
+    @property
+    def stats(self) -> SchedulerStats: ...
+
+
+# --------------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Callable[..., "Scheduler"]] = {}
+
+
+def register_scheduler(name: str):
+    """Class decorator registering a substrate under ``name`` (mirrors
+    ``models/registry.py``: one flat name -> factory map)."""
+
+    def deco(cls):
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def available_schedulers() -> List[str]:
+    """Registered substrate names, stable order."""
+    return sorted(_REGISTRY)
+
+
+def make_scheduler(name: str, **kwargs: Any) -> "Scheduler":
+    """Instantiate a substrate by name (not started)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; available: {available_schedulers()}"
+        ) from None
+    return factory(**kwargs)
+
+
+# ------------------------------------------------------------------ base class
+
+class _SchedulerBase:
+    """Shared plumbing: owning-thread checks, lifecycle flags, hints."""
+
+    def __init__(self) -> None:
+        self.stats = SchedulerStats()
+        self._started = False
+        self._closed = False
+        self._owner: Optional[int] = None
+
+    # lifecycle ------------------------------------------------------------
+    def start(self) -> "Scheduler":
+        if self._started:
+            raise SchedulerUsageError(f"{type(self).__name__} already started")
+        self._started = True
+        self._closed = False
+        self._owner = threading.get_ident()
+        self._start_impl()
+        return self
+
+    def close(self) -> None:
+        if not self._started or self._closed:
+            self._closed = True
+            return
+        self._closed = True
+        self._close_impl()
+
+    def _start_impl(self) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def _close_impl(self) -> None:  # pragma: no cover - trivial default
+        pass
+
+    # hints: advisory, default no-op (substrates that suspend when idle
+    # need no parking; spinning substrates override)
+    def sleep_hint(self) -> None:
+        pass
+
+    def wake_up_hint(self) -> None:
+        pass
+
+    # helpers --------------------------------------------------------------
+    def _check_submit(self, what: str = "submit()") -> None:
+        if not self._started:
+            raise SchedulerUsageError(f"{what} before start()")
+        if self._closed:
+            raise SchedulerUsageError(f"{what} after close()")
+        if self._owner is not None and threading.get_ident() != self._owner:
+            raise SchedulerUsageError(
+                f"{what} must be called from the owning (producer) thread"
+            )
+
+    def _record_error(self, exc: BaseException) -> None:
+        self.stats.task_errors += 1
+        if self.stats.last_error is None:
+            self.stats.last_error = exc
+
+    def _raise_pending(self) -> None:
+        if self.stats.last_error is not None:
+            err, self.stats.last_error = self.stats.last_error, None
+            raise err
+
+    # context manager ------------------------------------------------------
+    def __enter__(self) -> "Scheduler":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------------ substrates
+
+@register_scheduler("serial")
+class SerialScheduler(_SchedulerBase):
+    """The paper's baseline: no concurrency, tasks run inline at submit.
+
+    Useful as the control in benchmarks and as the zero-thread fallback
+    (e.g. pipelines in environments where spawning threads is undesirable).
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        super().__init__()
+        del capacity  # no queue: nothing to bound
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        self._check_submit()
+        self.stats.submitted += 1
+        try:
+            fn(*args, **kwargs)
+        except BaseException as e:  # surfaced at the next wait()
+            self._record_error(e)
+        self.stats.completed += 1
+
+    def wait(self) -> None:
+        self._raise_pending()
+
+
+@register_scheduler("relic")
+class RelicScheduler(_SchedulerBase):
+    """The paper's design (§VI): busy-wait SPSC ring, fixed producer and
+    assistant roles. Thin adapter over :class:`repro.core.relic.Relic`;
+    ``stats`` is the underlying ``RelicStats`` (a superset of
+    ``SchedulerStats`` counters, including spin/park telemetry)."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = True):
+        super().__init__()
+        self._relic = Relic(capacity=capacity, start_awake=start_awake)
+
+    @property  # type: ignore[override]
+    def stats(self):
+        return self._relic.stats
+
+    @stats.setter
+    def stats(self, value):  # _SchedulerBase.__init__ assigns; ignore it
+        pass
+
+    def _start_impl(self) -> None:
+        self._relic.start()
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        if not self._started:
+            # Relic itself would accept this (roles are fixed at start());
+            # the uniform contract says it must raise, like every substrate.
+            raise SchedulerUsageError("submit() before start()")
+        if self._closed:
+            raise SchedulerUsageError("submit() after close()")
+        self._relic.submit(fn, *args, **kwargs)
+
+    def wait(self) -> None:
+        # Relic itself guarantees advisory hints cannot deadlock the
+        # barrier (wait/full-ring submit un-park the assistant).
+        self._relic.wait()
+
+    def sleep_hint(self) -> None:
+        self._relic.sleep_hint()
+
+    def wake_up_hint(self) -> None:
+        self._relic.wake_up_hint()
+
+    def _close_impl(self) -> None:
+        try:
+            # Update completion counters. close() must not raise, but the
+            # error stays observable in stats (Relic.wait pops it to raise).
+            self._relic.wait()
+        except BaseException as e:
+            self._relic.stats.last_error = e
+        self._relic.shutdown()
+
+
+@register_scheduler("spin")
+class SpinQueueScheduler(_SchedulerBase):
+    """Persistent worker over a mutex-protected deque with spin waits on
+    both sides (the X-OpenMP flavour: lock-based queue + spinning).
+
+    Promoted from the benchmark-private ``_SpinWorker`` and hardened: the
+    queue is bounded (backpressure instead of unbounded growth), task
+    exceptions are captured and re-raised at ``wait()`` instead of killing
+    the worker, and ``sleep_hint()`` actually parks the spinning worker.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        super().__init__()
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self._capacity = capacity
+        self._dq: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._completed = 0            # worker-only writer
+        self._stop = False
+        self._awake = threading.Event()
+        self._awake.set()
+        self._t: Optional[threading.Thread] = None
+
+    def _start_impl(self) -> None:
+        self._t = threading.Thread(
+            target=self._loop, name=f"{self.name}-worker", daemon=True)
+        self._t.start()
+
+    def _loop(self) -> None:
+        spins = 0
+        while True:
+            item = None
+            with self._lock:
+                if self._dq:
+                    item = self._dq.popleft()
+            if item is None:
+                if self._stop:
+                    return
+                if not self._awake.is_set():
+                    self._awake.wait()
+                    continue
+                spins += 1
+                if spins % SPIN_PAUSE_EVERY == 0:
+                    time.sleep(0)
+                continue
+            spins = 0
+            fn, args, kwargs = item
+            try:
+                fn(*args, **kwargs)
+            except BaseException as e:
+                self._record_error(e)
+            self._completed += 1
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        self._check_submit()
+        spins = 0
+        while True:
+            with self._lock:
+                if len(self._dq) < self._capacity:
+                    self._dq.append((fn, args, kwargs))
+                    break
+            if spins == 0:
+                # Full queue + parked worker would deadlock this spin:
+                # hints are advisory, not fatal — un-park once (only this
+                # blocked thread could re-park it).
+                self._awake.set()
+            spins += 1               # bounded queue: spin until a slot frees
+            if spins % SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)
+        self.stats.submitted += 1
+
+    def wait(self) -> None:
+        if self._completed < self.stats.submitted:
+            # Advisory hints must not deadlock the barrier: un-park the
+            # worker (callers wanting it parked re-issue sleep_hint after).
+            self._awake.set()
+        spins = 0
+        while self._completed < self.stats.submitted:
+            spins += 1
+            if spins % SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)
+        self.stats.completed = self._completed
+        self._raise_pending()
+
+    def sleep_hint(self) -> None:
+        self._awake.clear()
+
+    def wake_up_hint(self) -> None:
+        self._awake.set()
+
+    def _close_impl(self) -> None:
+        self._stop = True
+        self._awake.set()
+        if self._t is not None:
+            self._t.join(timeout=5)
+            self._t = None
+        self.stats.completed = self._completed
+
+
+@register_scheduler("condvar")
+class CondvarQueueScheduler(_SchedulerBase):
+    """Persistent worker over a bounded ``queue.Queue`` (condition-variable
+    suspension on both sides — the GNU-OpenMP flavour: suspension-based
+    waits). Promoted from the benchmark-private ``_CondvarWorker`` and
+    hardened: bounded queue, exception capture, idempotent shutdown."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        super().__init__()
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._done = threading.Semaphore(0)
+        self._outstanding = 0
+        self._t: Optional[threading.Thread] = None
+
+    def _start_impl(self) -> None:
+        self._t = threading.Thread(
+            target=self._loop, name=f"{self.name}-worker", daemon=True)
+        self._t.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, args, kwargs = item
+            try:
+                fn(*args, **kwargs)
+            except BaseException as e:
+                self._record_error(e)
+            finally:
+                self.stats.completed += 1
+                self._done.release()
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        self._check_submit()
+        self._q.put((fn, args, kwargs))   # blocks when full: backpressure
+        self.stats.submitted += 1
+        self._outstanding += 1
+
+    def wait(self) -> None:
+        for _ in range(self._outstanding):
+            self._done.acquire()
+        self._outstanding = 0
+        self._raise_pending()
+
+    def _close_impl(self) -> None:
+        if self._t is not None:
+            self._q.put(None)             # drains FIFO: sentinel is last
+            self._t.join(timeout=5)
+            self._t = None
+
+
+@register_scheduler("pool")
+class PoolScheduler(_SchedulerBase):
+    """General thread pool + futures (the oneTBB/Taskflow flavour): dynamic
+    worker assignment, no fixed roles, OS-mediated wakeups. ``capacity``
+    bounds the number of in-flight tasks (a semaphore blocks submit when
+    full), matching the bounded-backpressure contract of the other
+    substrates — without it, consumers like the async checkpoint manager
+    could queue unbounded host-memory snapshots."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, workers: int = 2):
+        super().__init__()
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self._workers = workers
+        self._slots = threading.BoundedSemaphore(capacity)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: List[Future] = []
+
+    def _start_impl(self) -> None:
+        self._pool = ThreadPoolExecutor(
+            max_workers=self._workers, thread_name_prefix=f"{self.name}-worker")
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        self._check_submit()
+        assert self._pool is not None
+        self._slots.acquire()        # backpressure: block at capacity in flight
+        self.stats.submitted += 1
+        fut = self._pool.submit(fn, *args, **kwargs)
+        fut.add_done_callback(lambda _f: self._slots.release())
+        self._pending.append(fut)
+        if len(self._pending) >= 4 * self._workers:
+            # Consumers like PrefetchPipeline submit forever without ever
+            # calling wait(); reap finished futures so _pending stays O(1).
+            self._reap(block=False)
+
+    def _reap(self, block: bool) -> None:
+        still: List[Future] = []
+        for f in self._pending:
+            if block or f.done():
+                try:
+                    f.result()
+                except BaseException as e:
+                    self._record_error(e)
+                self.stats.completed += 1
+            else:
+                still.append(f)
+        self._pending = still
+
+    def wait(self) -> None:
+        self._reap(block=True)
+        self._raise_pending()
+
+    def _close_impl(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        # every future is done after shutdown(wait=True); record outcomes
+        # (close() must not raise — errors stay observable in stats)
+        self._reap(block=True)

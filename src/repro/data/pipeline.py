@@ -1,6 +1,6 @@
 """Data pipeline with a Relic-prefetched SPSC batch queue.
 
-The host-side instance of the paper's pattern (DESIGN.md §2): the **assistant
+The host-side instance of the paper's pattern (docs/schedulers.md): the **assistant
 thread produces** batches (synthetic generation / memmap reads / host->device
 transfer release the GIL) while the **main thread consumes** them in the
 train loop. `wake_up_hint()` is issued when the loop starts, `sleep_hint()`
@@ -20,7 +20,7 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from repro.core.relic import Relic
+from repro.core.schedulers import Scheduler, make_scheduler
 from repro.core.spsc import SpscRing
 
 
@@ -80,61 +80,119 @@ class MemmapLM:
         }
 
 
+class _ProduceFailure:
+    """Marker pushed through the ring when batch production raised; the
+    error surfaces at ``next_batch()`` for that index instead of hanging
+    the consumer on a batch that will never arrive."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
 class PrefetchPipeline:
-    """SPSC-prefetched batch stream driven by a Relic assistant."""
+    """SPSC-prefetched batch stream driven by a scheduling substrate.
+
+    Host-side overlap defaults to the paper's Relic runtime but accepts any
+    substrate from ``repro.core.schedulers`` — a registry name
+    (``"relic"``, ``"spin"``, ``"condvar"``, ``"pool"``, ``"serial"``) or a
+    not-yet-started ``Scheduler`` instance. ``"serial"`` degrades to
+    synchronous on-demand batch production (no worker thread), which is the
+    right fallback where spawning threads is undesirable.
+
+    Batches are delivered strictly in index order on *every* substrate:
+    arrivals are staged by index and released sequentially, so even the
+    multi-worker ``"pool"`` substrate (which may finish production out of
+    order) preserves the determinism/restart contract above.
+    """
 
     def __init__(self, source, dc: DataConfig, start_index: int = 0,
-                 transform: Optional[Callable[[dict], dict]] = None):
+                 transform: Optional[Callable[[dict], dict]] = None,
+                 scheduler: "str | Scheduler" = "relic"):
         self.source = source
         self.dc = dc
         self._next_submit = start_index
+        self._next_consume = start_index
+        self._stash: dict = {}   # out-of-order arrivals, keyed by index
         self._transform = transform
         self._ring = SpscRing(dc.prefetch)
-        self._relic = Relic(capacity=dc.prefetch, start_awake=False)
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, capacity=dc.prefetch)
+        self._sched = scheduler
         self._started = False
+        self._stopping = False
+        # The batch ring is SPSC by design; multi-worker substrates (pool)
+        # would race on push, so producers serialize on this lock. For the
+        # single-assistant substrates it is uncontended.
+        self._push_lock = threading.Lock()
 
     # -- assistant-side task ------------------------------------------------
     def _produce(self, index: int) -> None:
-        batch = self.source.batch(index)
-        if self._transform is not None:
-            batch = self._transform(batch)
-        while not self._ring.push((index, batch)):
+        try:
+            batch = self.source.batch(index)
+            if self._transform is not None:
+                batch = self._transform(batch)
+        except BaseException as e:
+            # Deliver the failure in-stream: the consumer would otherwise
+            # spin forever on a batch that will never arrive.
+            batch = _ProduceFailure(e)
+        while True:
+            with self._push_lock:
+                pushed = self._ring.push((index, batch))
+            if pushed:
+                return
+            if self._stopping:
+                return  # consumer is gone; drop instead of spinning forever
             time.sleep(0)  # bounded queue backpressure
 
     # -- main-thread API ----------------------------------------------------
     def start(self) -> "PrefetchPipeline":
         if not self._started:
-            self._relic.start()
-            self._relic.wake_up_hint()
+            if self._stopping:
+                # Substrates are one-shot; determinism makes restart cheap
+                # anyway (batch i is a pure function of (seed, i, shard)).
+                raise RuntimeError(
+                    "PrefetchPipeline cannot restart after stop(); build a "
+                    "new pipeline with start_index at the resume point")
+            self._sched.start()
+            self._sched.wake_up_hint()
             for _ in range(self.dc.prefetch):
-                self._relic.submit(self._produce, self._next_submit)
+                self._sched.submit(self._produce, self._next_submit)
                 self._next_submit += 1
             self._started = True
         return self
 
     def next_batch(self) -> dict:
         assert self._started, "call start() first"
-        while True:
+        while self._next_consume not in self._stash:
             item = self._ring.pop()
-            if item is not None:
-                break
-            time.sleep(0)
-        index, batch = item
+            if item is None:
+                time.sleep(0)
+                continue
+            self._stash[item[0]] = item[1]
+        batch = self._stash.pop(self._next_consume)
+        self._next_consume += 1
         # keep the assistant one window ahead
-        self._relic.submit(self._produce, self._next_submit)
+        self._sched.submit(self._produce, self._next_submit)
         self._next_submit += 1
+        if isinstance(batch, _ProduceFailure):
+            raise RuntimeError(
+                f"batch {self._next_consume - 1} production failed"
+            ) from batch.error
         return batch
 
     def pause(self) -> None:
         """Between parallelizable sections (paper's sleep_hint)."""
-        self._relic.sleep_hint()
+        self._sched.sleep_hint()
 
     def resume(self) -> None:
-        self._relic.wake_up_hint()
+        self._sched.wake_up_hint()
 
     def stop(self) -> None:
         if self._started:
-            self._relic.shutdown()
+            self._stopping = True  # unblock producers stuck on a full ring
+            self._sched.close()
             self._started = False
 
     def __iter__(self) -> Iterator[dict]:

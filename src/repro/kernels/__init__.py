@@ -2,7 +2,7 @@
 ``ops`` and an independent pure-jnp oracle in ``ref``:
 
   relic_matmul      — tiled matmul; the HBM→VMEM BlockSpec pipeline is the
-                      paper's SPSC producer/consumer ring (DESIGN.md §2)
+                      paper's SPSC producer/consumer ring (docs/schedulers.md)
   relic_matmul_gated— fused act(x@Wg)*(x@Wu) (no HBM intermediates)
   flash_attention   — GQA causal/full streaming attention
   wkv6              — RWKV-6 chunked recurrence (VMEM-resident state chain)

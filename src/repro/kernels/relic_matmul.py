@@ -1,6 +1,6 @@
 """relic_matmul — the paper's SPSC pipeline as a Pallas TPU matmul kernel.
 
-The Relic mapping (DESIGN.md §2): the Pallas grid pipeline double-buffers
+The Relic mapping (docs/schedulers.md): the Pallas grid pipeline double-buffers
 every BlockSpec operand — while the MXU (consumer lane) contracts block
 (i, j, k), the DMA engines (producer lane) are already copying block
 (i, j, k+1) HBM→VMEM. The in-flight VMEM block pair is a bounded SPSC queue

@@ -2,7 +2,7 @@
 
 Layout: [B, H, T, K]. Grid: (batch, head, chunk) — the chunk axis is
 sequential; the [K, K] state matrix lives in VMEM scratch and is handed from
-chunk t to chunk t+1 (the SPSC chunk-state chain of DESIGN.md §4, here with
+chunk t to chunk t+1 (the SPSC chunk-state chain pattern, here with
 zero HBM round-trips for the state). Within a chunk the recurrence is the
 matmul-form expansion (cumulative log-decay rescaling), so the MXU does the
 work while the next chunk's r/k/v/w blocks stream in.

@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import sharding as shd
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.launch.steps import (
@@ -239,7 +240,7 @@ def _cost_points(cfg: ModelConfig, shape: ShapeConfig, mesh):
 
     def costs(c):
         _, comp, _ = lower_cell(c, shape, mesh)
-        ca = comp.cost_analysis()
+        ca = compat.cost_analysis(comp)
         coll = parse_collectives(comp.as_text())
         return {
             "flops": float(ca.get("flops", 0.0)),

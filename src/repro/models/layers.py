@@ -155,7 +155,7 @@ def mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
 
             # Relic two-lane ring: fused AG(gate+up) + RS(down), seq-sharded
             # residual stream; every ppermute overlaps the previous chunk's
-            # matmul (DESIGN.md §2).
+            # matmul (docs/schedulers.md).
             return mlp_ring(cfg.act, x, p["w_gate"].astype(cd),
                             p["w_up"].astype(cd), p["w_down"].astype(cd), mesh,
                             full_unroll=not cfg.scan_layers)

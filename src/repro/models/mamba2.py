@@ -4,7 +4,7 @@ decay, used by the zamba2 hybrid.
 The chunked algorithm is the SSD decomposition: intra-chunk terms are a
 masked "attention-like" matmul against C·B^T with cumulative scalar decays;
 inter-chunk state is carried by a `lax.scan` (the same SPSC chunk-state chain
-as rwkv6 — see DESIGN.md §4). Scalar decay keeps the log-space rescaling
+as rwkv6 — see repro/kernels/ssd.py). Scalar decay keeps the log-space rescaling
 numerically benign at chunk=128.
 
 Decode carries (conv_state [B,conv_dim,k-1], ssm_state [B,H,P,N]) — O(1).

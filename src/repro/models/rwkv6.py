@@ -5,7 +5,7 @@ recurrence is expanded into matmuls against cumulative-decay-rescaled r/k
 (MXU-friendly), and chunk-to-chunk state is carried by a `lax.scan` — the
 chunk state handoff is a literal SPSC chain (chunk t produces the state chunk
 t+1 consumes), which is how the paper's pattern shows up in an attention-free
-arch (DESIGN.md §4).
+arch (see repro/kernels/wkv6.py).
 
 Numerics: decays are computed in log space; chunk length (cfg.ssm.chunk,
 default 64 for rwkv6) bounds `exp(-logA)` growth. The naive per-step scan in

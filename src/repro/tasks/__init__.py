@@ -2,3 +2,4 @@
 implemented as microsecond-scale JAX kernels."""
 
 from repro.tasks import graph, jsonparse  # noqa: F401
+from repro.tasks.graph import gap_task_graph, run_wavefronts  # noqa: F401

@@ -177,3 +177,90 @@ def betweenness_centrality(adj: jax.Array, source: int = 0,
 
     delta = jax.lax.fori_loop(0, max_level, bwd, delta)
     return delta.at[source].set(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Dependency-aware wavefront driver: GAP kernels over any Scheduler substrate.
+# ---------------------------------------------------------------------------
+
+def run_wavefronts(tasks, scheduler):
+    """Execute a host task graph over any ``repro.core.schedulers`` substrate.
+
+    ``tasks`` maps name -> ``(fn, deps)`` where ``deps`` is a sequence of
+    task names; ``fn`` receives its dependencies' results positionally (in
+    ``deps`` order). Tasks whose dependencies are all resolved form a
+    *wavefront*: all but one are submitted to ``scheduler`` and the last
+    runs on the calling (producer) thread — the paper's
+    producer-participates pattern (main thread does its own half of the
+    work, §VI). A ``scheduler.wait()`` barrier separates wavefronts.
+
+    Returns ``{name: result}``. Raises ``ValueError`` on unknown
+    dependencies or cycles. The scheduler must already be started; it is
+    left running (callers own its lifecycle).
+    """
+    for name, (_, deps) in tasks.items():
+        for d in deps:
+            if d not in tasks:
+                raise ValueError(f"task {name!r} depends on unknown {d!r}")
+
+    import threading
+
+    results: dict = {}
+    results_lock = threading.Lock()  # pool workers write concurrently
+    remaining = dict(tasks)
+    while remaining:
+        wave = [n for n, (_, deps) in remaining.items()
+                if all(d in results for d in deps)]
+        if not wave:
+            raise ValueError(
+                f"dependency cycle among {sorted(remaining)}")
+
+        def _run(name, fn, deps):
+            out = fn(*[results[d] for d in deps])  # deps: earlier waves only
+            with results_lock:
+                results[name] = out
+
+        for name in wave[:-1]:
+            fn, deps = remaining[name]
+            scheduler.submit(_run, name, fn, tuple(deps))
+        last = wave[-1]
+        _run(last, *remaining[last])
+        scheduler.wait()
+        for name in wave:
+            del remaining[name]
+    return results
+
+
+def gap_task_graph(adj: jax.Array, w: jax.Array, source: int = 0):
+    """The paper's GAP kernel suite as a ``run_wavefronts`` task graph.
+
+    Wave 1 runs the five independent kernels; wave 2 runs betweenness
+    centrality (reusing nothing device-side, but gated on ``bfs`` so the
+    graph actually exercises dependencies) and a ``summary`` reduction over
+    every kernel's output. Each task blocks on its device result so the
+    scheduler measures real completion, not async dispatch.
+    """
+
+    def done(x):
+        return jax.block_until_ready(x)
+
+    return {
+        "bfs": (lambda: done(bfs(adj, source)), ()),
+        "cc": (lambda: done(connected_components(adj)), ()),
+        "pagerank": (lambda: done(pagerank(adj)), ()),
+        "sssp": (lambda: done(sssp(w, source)), ()),
+        "tc": (lambda: done(triangle_count(adj)), ()),
+        "bc": (lambda _bfs: done(betweenness_centrality(adj, source)),
+               ("bfs",)),
+        "summary": (
+            lambda b, c, pr, d, t, bc_: {
+                "reached": int((np.asarray(b) >= 0).sum()),
+                "components": int(len(np.unique(np.asarray(c)))),
+                "pr_mass": float(np.asarray(pr).sum()),
+                "finite_paths": int((np.asarray(d) < 1e8).sum()),
+                "triangles": float(t),
+                "max_bc": float(np.asarray(bc_).max()),
+            },
+            ("bfs", "cc", "pagerank", "sssp", "tc", "bc"),
+        ),
+    }

@@ -33,6 +33,96 @@ def test_spsc_fifo_property(items, capacity):
     assert out == items
 
 
+@pytest.mark.parametrize("capacity", [1, 2, 3, 128])
+def test_spsc_wraparound_past_capacity_multiples(capacity):
+    """Head/tail are monotonically increasing counters: behaviour must be
+    identical long after the indices pass several capacity multiples."""
+    ring = SpscRing(capacity)
+    n = capacity * 7 + 3  # lands mid-window, several wraps in
+    sent = 0
+    got = []
+    while len(got) < n:
+        while sent < n and ring.push(sent):
+            sent += 1
+        assert len(ring) <= capacity
+        item = ring.pop()
+        if item is not None:
+            got.append(item)
+    assert got == list(range(n))
+    assert ring.empty() and not ring.full()
+    # counters sit far past capacity; a fresh cycle still behaves
+    assert ring.push("x") and ring.pop() == "x" and ring.pop() is None
+
+
+def test_spsc_capacity_one_edge_case():
+    """capacity=1 alternates strictly full/empty — the tightest schedule."""
+    ring = SpscRing(1)
+    assert ring.pop() is None
+    for i in range(10):
+        assert ring.push(i)
+        assert ring.full() and not ring.push(99)  # one slot only
+        assert len(ring) == 1
+        assert ring.pop() == i
+        assert ring.empty() and ring.pop() is None
+
+
+@pytest.mark.parametrize("capacity", [1, 2, 7])
+def test_spsc_concurrent_1p1c_fifo_no_loss(capacity):
+    """One producer + one consumer interleaving arbitrarily: FIFO order is
+    preserved and no item is lost or duplicated, even at capacity 1."""
+    ring = SpscRing(capacity)
+    n = 20_000
+    out = []
+    stop = threading.Event()
+
+    def consumer():
+        while len(out) < n and not stop.is_set():
+            item = ring.pop()
+            if item is not None:
+                out.append(item)
+            else:
+                time.sleep(0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    try:
+        i = 0
+        while i < n:
+            if ring.push(i):
+                i += 1
+            else:
+                time.sleep(0)
+        t.join(30)
+    finally:
+        stop.set()
+        t.join(5)
+    assert out == list(range(n))
+
+
+@given(st.data(), st.integers(min_value=1, max_value=8))
+@settings(deadline=None, max_examples=30)
+def test_spsc_property_any_interleaving_is_fifo(data, capacity):
+    """Model-based check: under ANY single-threaded push/pop interleaving
+    (chosen by hypothesis), the ring agrees with an ideal FIFO of the same
+    capacity, including across many wraparounds."""
+    ring = SpscRing(capacity)
+    model: list = []
+    next_item = 0
+    for _ in range(data.draw(st.integers(10, 200))):
+        if data.draw(st.booleans()):
+            pushed = ring.push(next_item)
+            assert pushed == (len(model) < capacity)
+            if pushed:
+                model.append(next_item)
+                next_item += 1
+        else:
+            got = ring.pop()
+            assert got == (model.pop(0) if model else None)
+        assert len(ring) == len(model)
+        assert ring.empty() == (not model)
+        assert ring.full() == (len(model) == capacity)
+
+
 def test_spsc_full_empty():
     ring = SpscRing(2)
     assert ring.pop() is None
