@@ -9,18 +9,26 @@
   spsc  — raw scheduling overhead: ns per submit+wait round-trip per
           structure (the mechanism behind the figures)
   wavefront — the GAP kernel task graph executed end-to-end over every
-          substrate in the repro.core.schedulers registry via
-          repro.tasks.graph.run_wavefronts (dependency-aware scheduling,
+          substrate in the repro.core.schedulers registry via the
+          repro.tasks.api.TaskGraph façade (dependency-aware scheduling,
           not just the two-task microbenchmark)
+  grain — parallel_for grain-size sweep per substrate (grain is the
+          paper's central variable: tasks-per-chunk vs scheduling
+          overhead on a fixed GIL-releasing µs-scale body)
   roofline — summary of the dry-run artifacts, if present
 
-Output: ``name,us_per_call,derived`` CSV per line.
-Usage: PYTHONPATH=src python -m benchmarks.run [--iters 1000] [--only fig1]
+Output: ``name,us_per_call,derived`` CSV per line on stdout (unchanged
+format); ``--json PATH`` additionally writes the same rows, grouped per
+section with run metadata, to a machine-readable JSON file (convention:
+``BENCH_<tag>.json``) so the perf trajectory is recorded across PRs.
+Usage: PYTHONPATH=src python -m benchmarks.run [--iters 1000]
+       [--only fig1] [--json BENCH_pr2.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import sys
 import time
@@ -33,7 +41,31 @@ STRATEGIES = ["serial", "relic_spsc", "locked_queue_spin",
               "jax_async_stream", "fused_vmap"]
 
 
-def run_figures(iters: int):
+class Emitter:
+    """Prints the historical CSV stream and collects rows for --json."""
+
+    def __init__(self):
+        self.sections: dict = {}
+
+    def comment(self, text: str) -> None:
+        print(f"# {text}")
+
+    def header(self, text: str) -> None:
+        self.comment(text)
+        print("name,us_per_call,derived")
+
+    def row(self, name: str, us: float, derived: str) -> None:
+        print(f"{name},{us:.2f},{derived}")
+        section = name.split("/", 1)[0]
+        self.sections.setdefault(section, []).append(
+            {"name": name, "us_per_call": round(us, 3), "derived": derived})
+
+    def dump(self, path: str, meta: dict) -> None:
+        payload = {"meta": meta, "sections": self.sections}
+        Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True))
+
+
+def run_figures(iters: int, em: Emitter):
     from benchmarks.paper_kernels import build_tasks
     from benchmarks.schedulers import bench_strategies
 
@@ -43,24 +75,21 @@ def run_figures(iters: int):
         results[name] = bench_strategies(ta, tb, fused, iters=iters)
 
     # fig1: µs/iter and speedup-over-serial per kernel × strategy
-    print("# fig1: per-kernel scheduling comparison")
-    print("name,us_per_call,derived")
+    em.header("fig1: per-kernel scheduling comparison")
     for kernel, res in results.items():
         base = res["serial"]
         for strat in STRATEGIES:
             sp = base / res[strat]
-            print(f"fig1/{kernel}/{strat},{res[strat]:.2f},speedup={sp:.3f}")
+            em.row(f"fig1/{kernel}/{strat}", res[strat], f"speedup={sp:.3f}")
 
     # fig3: Relic per-kernel speedups
-    print("# fig3: Relic speedup over serial per kernel")
-    print("name,us_per_call,derived")
+    em.header("fig3: Relic speedup over serial per kernel")
     for kernel, res in results.items():
         sp = res["serial"] / res["relic_spsc"]
-        print(f"fig3/{kernel},{res['relic_spsc']:.2f},speedup={sp:.3f}")
+        em.row(f"fig3/{kernel}", res["relic_spsc"], f"speedup={sp:.3f}")
 
     # fig4: geomean without negative outliers
-    print("# fig4: geomean speedup, negative outliers replaced by serial")
-    print("name,us_per_call,derived")
+    em.header("fig4: geomean speedup, negative outliers replaced by serial")
     fig4 = {}
     for strat in STRATEGIES:
         sps = [max(results[k]["serial"] / results[k][strat], 1.0)
@@ -68,17 +97,17 @@ def run_figures(iters: int):
         gm = math.exp(sum(math.log(s) for s in sps) / len(sps))
         fig4[strat] = gm
         mean_us = sum(results[k][strat] for k in results) / len(results)
-        print(f"fig4/{strat},{mean_us:.2f},geomean_speedup={gm:.3f}")
+        em.row(f"fig4/{strat}", mean_us, f"geomean_speedup={gm:.3f}")
     best_other = max((v for k, v in fig4.items()
                       if k not in ("relic_spsc", "fused_vmap", "serial")),
                      default=1.0)
     rel = fig4.get("relic_spsc", 1.0)
-    print(f"fig4/relic_vs_best_framework,0.00,"
-          f"relic_gain={(rel / best_other - 1) * 100:.1f}%")
+    em.row("fig4/relic_vs_best_framework", 0.0,
+           f"relic_gain={(rel / best_other - 1) * 100:.1f}%")
     return results
 
 
-def run_spsc(iters: int):
+def run_spsc(iters: int, em: Emitter):
     """Raw round-trip overhead per scheduling structure (empty task)."""
     from benchmarks.schedulers import bench_strategies
 
@@ -90,79 +119,131 @@ def run_spsc(iters: int):
     f(zero).block_until_ready()
     res = bench_strategies(lambda: f(zero), lambda: f(zero),
                            lambda: f(zero), iters=iters)
-    print("# spsc: scheduling overhead on a trivial task")
-    print("name,us_per_call,derived")
+    em.header("spsc: scheduling overhead on a trivial task")
     for k, v in res.items():
-        print(f"spsc/{k},{v:.2f},overhead_vs_serial={v - res['serial']:.2f}us")
+        em.row(f"spsc/{k}", v, f"overhead_vs_serial={v - res['serial']:.2f}us")
     return res
 
 
-def run_wavefront(iters: int):
-    """GAP task graph over every registered substrate (same graph, same
+def run_wavefront(iters: int, em: Emitter):
+    """GAP task graph over every registered substrate (same TaskGraph, same
     dependency structure — only the scheduling substrate varies)."""
-    from repro.core.schedulers import available_schedulers, make_scheduler
-    from repro.tasks.graph import gap_task_graph, kronecker_graph, run_wavefronts
+    from repro.core.schedulers import available_schedulers
+    from repro.tasks.api import TaskScope
+    from repro.tasks.graph import gap_task_graph, kronecker_graph
 
     adj, w = kronecker_graph()
-    tasks = gap_task_graph(adj, w)
+    graph = gap_task_graph(adj, w)
     # compile/warm every kernel once outside the timed region
-    with make_scheduler("serial") as warm:
-        baseline = run_wavefronts(tasks, warm)
+    baseline = graph.run("serial")
 
     iters = max(iters // 10, 10)
-    print("# wavefront: GAP task graph per substrate (µs per full graph)")
-    print("name,us_per_call,derived")
+    em.header("wavefront: GAP task graph per substrate (µs per full graph)")
     times = {}
     for name in available_schedulers():
-        with make_scheduler(name) as sched:
+        with TaskScope(name) as scope:
             t0 = time.perf_counter()
             for _ in range(iters):
-                res = run_wavefronts(tasks, sched)
+                res = graph.run(scope)
             us = (time.perf_counter() - t0) / iters * 1e6
         assert res["summary"] == baseline["summary"], name
         times[name] = us
     for name, us in times.items():
         sp = times["serial"] / us
-        print(f"wavefront/{name},{us:.2f},speedup={sp:.3f}")
+        em.row(f"wavefront/{name}", us, f"speedup={sp:.3f}")
     return times
 
 
-def run_roofline():
+def run_grain(iters: int, em: Emitter):
+    """parallel_for grain-size sweep: n=256 instances of a GIL-releasing
+    µs-scale NumPy body, chunked at each grain, per substrate. Grain is
+    the paper's central variable — too fine and scheduling overhead
+    dominates (one task per index), too coarse and there is nothing left
+    to overlap (one task total)."""
+    import numpy as np
+
+    from repro.core.schedulers import available_schedulers
+    from repro.tasks.api import TaskScope, parallel_for
+
+    n = 256
+    grains = [1, 8, 32, 128, 256]
+    rng = np.random.default_rng(0)
+    m = rng.standard_normal((48, 48)).astype(np.float32)
+
+    def body(_i):
+        np.dot(m, m)  # ~µs-scale, releases the GIL (paper §IV task sizes)
+
+    reps = max(iters // 30, 5)
+    times: dict = {}
+    for name in available_schedulers():
+        times[name] = {}
+        with TaskScope(name) as scope:
+            for grain in grains:
+                parallel_for(scope, n, body, grain=grain)  # warmup
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    parallel_for(scope, n, body, grain=grain)
+                times[name][grain] = (time.perf_counter() - t0) / reps * 1e6
+    em.header(f"grain: parallel_for grain sweep, n={n} µs-scale bodies "
+              "(µs per loop)")
+    for name, per_grain in times.items():
+        for grain, us in per_grain.items():
+            sp = times["serial"][grain] / us
+            em.row(f"grain/{name}/g{grain}", us,
+                   f"tasks={math.ceil(n / grain)};speedup={sp:.3f}")
+    return times
+
+
+def run_roofline(em: Emitter):
     from benchmarks.roofline import load_records
 
     recs = load_records()
     if not recs:
-        print("# roofline: no dry-run artifacts (run repro.launch.dryrun)")
+        em.comment("roofline: no dry-run artifacts (run repro.launch.dryrun)")
         return
-    print("# roofline: dominant term per dry-run cell (seconds/step)")
-    print("name,us_per_call,derived")
+    em.header("roofline: dominant term per dry-run cell (seconds/step)")
     for r in recs:
         tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
         if "skipped" in r:
-            print(f"{tag},0.00,skipped")
+            em.row(tag, 0.0, "skipped")
             continue
         t = r["roofline_terms_s"]
         dom = r["dominant"]
-        print(f"{tag},{t[dom]*1e6:.0f},dominant={dom}"
-              f";ratio={r.get('useful_flops_ratio') or 0:.3f}")
+        em.row(tag, t[dom] * 1e6,
+               f"dominant={dom};ratio={r.get('useful_flops_ratio') or 0:.3f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--only", default="all",
-                    choices=["all", "fig1", "spsc", "wavefront", "roofline"])
+                    choices=["all", "fig1", "spsc", "wavefront", "grain",
+                             "roofline"])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-section results (µs + speedups) to "
+                         "this JSON file, e.g. BENCH_pr2.json")
     args = ap.parse_args()
+    em = Emitter()
     t0 = time.time()
     if args.only in ("all", "fig1"):
-        run_figures(args.iters)
+        run_figures(args.iters, em)
     if args.only in ("all", "spsc"):
-        run_spsc(args.iters)
+        run_spsc(args.iters, em)
     if args.only in ("all", "wavefront"):
-        run_wavefront(args.iters)
+        run_wavefront(args.iters, em)
+    if args.only in ("all", "grain"):
+        run_grain(args.iters, em)
     if args.only in ("all", "roofline"):
-        run_roofline()
-    print(f"# total {time.time() - t0:.1f}s")
+        run_roofline(em)
+    total = time.time() - t0
+    print(f"# total {total:.1f}s")
+    if args.json:
+        em.dump(args.json, meta={
+            "iters": args.iters, "only": args.only,
+            "total_s": round(total, 1),
+            "unix_time": int(time.time()),
+            "python": sys.version.split()[0],
+        })
 
 
 if __name__ == "__main__":

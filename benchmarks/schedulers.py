@@ -4,10 +4,12 @@ The paper compares seven task-parallel frameworks scheduling two ~1 µs task
 instances onto the two logical threads of one SMT core. The host-runtime
 translation benchmarks the same *scheduling structures* on this machine.
 
-Every substrate below comes from the ``repro.core.schedulers`` registry —
-this module owns no private worker classes; it only drives library
-substrates through the uniform Scheduler contract (submit partner task,
-run own task, wait). Strategy-name mapping:
+Every substrate below comes from the ``repro.core.schedulers`` registry and
+is driven through the public tasking façade (``repro.tasks.api.TaskScope``:
+submit partner task, run own task, ``barrier()``) — the same surface every
+in-repo workload uses, so measured overhead is the overhead a real caller
+pays, handle allocation and error aggregation included. Strategy-name
+mapping:
 
   serial              — ``serial``: both instances sequentially in the main
                         thread (the paper's baseline)
@@ -39,7 +41,7 @@ from typing import Callable, Dict
 
 import jax
 
-from repro.core.schedulers import make_scheduler
+from repro.tasks.api import TaskScope
 
 # benchmark strategy name -> repro.core.schedulers registry name
 SUBSTRATE_STRATEGIES = {
@@ -75,22 +77,22 @@ def bench_strategies(task_a: Callable[[], jax.Array],
 
     # --- registry substrates ------------------------------------------------
     # Fixed-role substrates use the paper's producer-participates pattern
-    # (submit partner task, run own task, wait); the pool keeps its
+    # (submit partner task, run own task, barrier); the pool keeps its
     # historical general-pool semantics — BOTH instances handed to the
     # 2-worker pool, main thread only joining — so the CSV label keeps
     # measuring the same scheduling structure as before the refactor.
     for strategy, substrate in SUBSTRATE_STRATEGIES.items():
-        with make_scheduler(substrate) as sched:
+        with TaskScope(substrate) as scope:
             if substrate == "pool":
-                def step(sched=sched):
-                    sched.submit(run_sync, task_a)
-                    sched.submit(run_sync, task_b)
-                    sched.wait()
+                def step(scope=scope):
+                    scope.submit(run_sync, task_a)
+                    scope.submit(run_sync, task_b)
+                    scope.barrier()
             else:
-                def step(sched=sched):
-                    sched.submit(run_sync, task_b)
+                def step(scope=scope):
+                    scope.submit(run_sync, task_b)
                     run_sync(task_a)
-                    sched.wait()
+                    scope.barrier()
 
             out[strategy] = _timeit(step, iters, warmup)
 

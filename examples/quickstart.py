@@ -1,6 +1,7 @@
 """Quickstart: the three layers of the framework in ~60 lines.
 
-  1. Relic host runtime — the paper's SPSC fine-grained tasking API.
+  1. Structured tasking façade — TaskScope/parallel_for over the paper's
+     Relic runtime (scope exit is the barrier; raw submit/wait is the SPI).
   2. A model from the zoo — one train step + one decode step.
   3. The two-lane device schedule — overlapped collective matmul (shown on
      whatever devices exist; run under XLA_FLAGS=...device_count=8 to see it
@@ -14,20 +15,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Relic
 from repro.launch.steps import make_serve_step, make_train_state, make_train_step
 from repro.models import build_model
 from repro.optim import OptConfig
+from repro.tasks import TaskScope, parallel_for
 
-# ---------------------------------------------------------------- 1. Relic
-results = []
-with Relic() as rt:                   # assistant thread starts parked
-    rt.wake_up_hint()                 # a parallelizable section is coming
-    for i in range(8):
-        rt.submit(lambda i=i: results.append(i * i))   # main-thread-only
-    rt.wait()                         # busy-wait barrier
-    rt.sleep_hint()                   # park the assistant again
-print("relic results:", sorted(results))
+# ------------------------------------------------- 1. the tasking façade
+squares = [0] * 8
+with TaskScope("relic") as scope:     # Relic assistant spun up for the scope
+    scope.wake_up_hint()              # a parallelizable section is coming
+    # worksharing loop: chunks of 2 indices; the main thread runs the
+    # final chunk itself (the paper's producer-participates pattern)
+    parallel_for(scope, 8, lambda i: squares.__setitem__(i, i * i), grain=2)
+    total = scope.submit(sum, squares)   # futures, too: a TaskHandle
+    # scope exit = barrier; task errors (none here) would raise together
+print("parallel_for squares:", squares, "| sum future:", total.result())
 
 # ------------------------------------------------------- 2. model + training
 cfg = get_config("relic_tiny", smoke=True)

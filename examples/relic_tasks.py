@@ -33,8 +33,8 @@ def main():
             row += f"{res[s]:>12.1f}us x{base/res[s]:>5.2f}  "
         print(row)
     print("\n(1-CPU container: thread-based overlap is GIL-bound — see "
-          "EXPERIMENTS.md §Paper-repro for the full 8-strategy figure and "
-          "the SMT-assumption discussion.)")
+          "docs/EXPERIMENTS.md §Paper repro for the full 8-strategy figure "
+          "recipe and the SMT-assumption discussion.)")
 
 
 if __name__ == "__main__":

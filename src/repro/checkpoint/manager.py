@@ -31,7 +31,8 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.schedulers import Scheduler, make_scheduler
+from repro.core.schedulers import Scheduler
+from repro.tasks.api import TaskScope
 
 MANIFEST = "manifest.json"
 
@@ -57,7 +58,9 @@ def _unflat_into(template, flat: dict):
 class CheckpointManager:
     """``scheduler`` selects the host-overlap substrate for async saves: a
     ``repro.core.schedulers`` registry name or a not-yet-started
-    ``Scheduler`` instance (default: the paper's Relic runtime)."""
+    ``Scheduler`` instance (default: the paper's Relic runtime). Async
+    writes run inside a long-lived :class:`repro.tasks.api.TaskScope`
+    whose ``barrier()`` (see :meth:`wait`) closes each save window."""
 
     def __init__(self, directory: str | Path, keep: int = 3,
                  async_: bool = True, scheduler: "str | Scheduler" = "relic"):
@@ -68,30 +71,30 @@ class CheckpointManager:
         # _write/_gc assume one writer at a time; multi-worker substrates
         # (pool) could otherwise interleave two saves on the same paths.
         self._write_lock = threading.Lock()
-        self._sched: Optional[Scheduler] = None
+        self._scope: Optional[TaskScope] = None
         if async_:
-            if isinstance(scheduler, str):
-                scheduler = make_scheduler(scheduler)
-            self._sched = scheduler.start()
-            self._sched.sleep_hint()   # park until the first save window
+            self._scope = TaskScope(scheduler)
+            self._scope.sleep_hint()   # park until the first save window
 
     # ------------------------------------------------------------------ save
 
     def save(self, state, step: int, *, block: bool = False) -> None:
         host = {k: np.asarray(jax.device_get(v))
                 for k, v in _flat(state).items()}
-        if self._sched is not None:
-            self._sched.wake_up_hint()
-            self._sched.submit(self._write, host, step)
+        if self._scope is not None:
+            self._scope.wake_up_hint()
+            self._scope.submit(self._write, host, step)
             if block:
                 self.wait()
         else:
             self._write(host, step)
 
     def wait(self) -> None:
-        if self._sched is not None:
-            self._sched.wait()
-            self._sched.sleep_hint()
+        """Barrier on outstanding writes; re-raises write errors (several
+        failed saves surface together as ``TaskGroupError``)."""
+        if self._scope is not None:
+            self._scope.barrier()
+            self._scope.sleep_hint()
 
     def _write(self, host: dict, step: int) -> None:
         with self._write_lock:
@@ -165,9 +168,9 @@ class CheckpointManager:
         return _unflat_into(template, out), step
 
     def close(self) -> None:
-        if self._sched is not None:
+        if self._scope is not None:
             try:
-                self._sched.wait()   # surfaces a pending write error
+                self._scope.barrier()   # surfaces pending write errors
             finally:
-                self._sched.close()  # but never leaks the worker thread
-                self._sched = None
+                self._scope.close()     # but never leaks the worker thread
+                self._scope = None

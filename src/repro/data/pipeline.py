@@ -20,8 +20,9 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-from repro.core.schedulers import Scheduler, make_scheduler
+from repro.core.schedulers import Scheduler
 from repro.core.spsc import SpscRing
+from repro.tasks.api import TaskScope
 
 
 @dataclass(frozen=True)
@@ -105,6 +106,11 @@ class PrefetchPipeline:
     arrivals are staged by index and released sequentially, so even the
     multi-worker ``"pool"`` substrate (which may finish production out of
     order) preserves the determinism/restart contract above.
+
+    Production runs inside a long-lived :class:`repro.tasks.api.TaskScope`
+    (the structured tasking façade) rather than on raw scheduler
+    submit/wait; ``_produce`` handles its own failures in-stream (see
+    ``_ProduceFailure``), so the scope's error aggregation stays empty.
     """
 
     def __init__(self, source, dc: DataConfig, start_index: int = 0,
@@ -117,9 +123,8 @@ class PrefetchPipeline:
         self._stash: dict = {}   # out-of-order arrivals, keyed by index
         self._transform = transform
         self._ring = SpscRing(dc.prefetch)
-        if isinstance(scheduler, str):
-            scheduler = make_scheduler(scheduler, capacity=dc.prefetch)
-        self._sched = scheduler
+        self._scheduler_spec = scheduler
+        self._scope: Optional[TaskScope] = None
         self._started = False
         self._stopping = False
         # The batch ring is SPSC by design; multi-worker substrates (pool)
@@ -155,10 +160,14 @@ class PrefetchPipeline:
                 raise RuntimeError(
                     "PrefetchPipeline cannot restart after stop(); build a "
                     "new pipeline with start_index at the resume point")
-            self._sched.start()
-            self._sched.wake_up_hint()
+            spec = self._scheduler_spec
+            if isinstance(spec, str):
+                self._scope = TaskScope(spec, capacity=self.dc.prefetch)
+            else:
+                self._scope = TaskScope(spec)
+            self._scope.wake_up_hint()
             for _ in range(self.dc.prefetch):
-                self._sched.submit(self._produce, self._next_submit)
+                self._scope.submit(self._produce, self._next_submit)
                 self._next_submit += 1
             self._started = True
         return self
@@ -174,7 +183,7 @@ class PrefetchPipeline:
         batch = self._stash.pop(self._next_consume)
         self._next_consume += 1
         # keep the assistant one window ahead
-        self._sched.submit(self._produce, self._next_submit)
+        self._scope.submit(self._produce, self._next_submit)
         self._next_submit += 1
         if isinstance(batch, _ProduceFailure):
             raise RuntimeError(
@@ -184,15 +193,17 @@ class PrefetchPipeline:
 
     def pause(self) -> None:
         """Between parallelizable sections (paper's sleep_hint)."""
-        self._sched.sleep_hint()
+        if self._scope is not None:
+            self._scope.sleep_hint()
 
     def resume(self) -> None:
-        self._sched.wake_up_hint()
+        if self._scope is not None:
+            self._scope.wake_up_hint()
 
     def stop(self) -> None:
         if self._started:
             self._stopping = True  # unblock producers stuck on a full ring
-            self._sched.close()
+            self._scope.close()
             self._started = False
 
     def __iter__(self) -> Iterator[dict]:

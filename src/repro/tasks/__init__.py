@@ -1,5 +1,13 @@
-"""The paper's fine-grained benchmark tasks (graph kernels + JSON parsing),
-implemented as microsecond-scale JAX kernels."""
+"""The paper's fine-grained benchmark tasks (graph kernels + JSON parsing)
+and the structured tasking façade every workload targets.
+
+``repro.tasks.api`` is the public tasking surface (TaskScope / TaskHandle /
+parallel_for / map_reduce / TaskGraph); raw ``Scheduler.submit()/wait()``
+in ``repro.core.schedulers`` is the substrate SPI beneath it.
+"""
 
 from repro.tasks import graph, jsonparse  # noqa: F401
+from repro.tasks.api import (TaskCancelledError, TaskGraph,  # noqa: F401
+                             TaskGroupError, TaskHandle, TaskScope,
+                             map_reduce, parallel_for)
 from repro.tasks.graph import gap_task_graph, run_wavefronts  # noqa: F401

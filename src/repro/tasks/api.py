@@ -1,0 +1,524 @@
+"""Structured tasking façade over ``repro.core.schedulers``.
+
+The paper's thesis is that fine-grained task parallelism pays off only when
+*expressing* a task is nearly free (§VI: Relic's submit is a ring push).
+The raw ``Scheduler`` contract from ``repro.core.schedulers`` keeps that
+cost profile but pushes real ergonomics onto every caller: results come
+back only through caller-managed shared state, and of N task errors only
+the first survives ``wait()``. This module is the high-level layer the
+FastFlow line of work (Aldinucci et al., 2009) argues such runtimes need —
+a small structured-concurrency surface that every in-repo consumer (and
+every future workload) targets, leaving raw ``submit()``/``wait()`` as the
+substrate SPI.
+
+The surface:
+
+  * :class:`TaskScope` — context manager bound to a substrate (registry
+    name or ``Scheduler`` instance). Scope exit is the barrier. Task
+    errors are aggregated per scope and re-raised together (a
+    :class:`TaskGroupError` when more than one task failed) instead of
+    the SPI's first-error-wins.
+  * ``scope.submit(fn, *args) -> TaskHandle`` — a lightweight future with
+    ``result()`` / ``exception()`` / ``done()``.
+  * :func:`parallel_for` — worksharing loop tasking (Maroñas et al., 2020)
+    with explicit ``grain`` chunking; the calling thread runs the final
+    chunk itself (the paper's producer-participates pattern, §VI).
+  * :func:`map_reduce` — ``parallel_for`` with per-chunk local reduction
+    and a deterministic chunk-order combine on the calling thread.
+  * :class:`TaskGraph` — dependency-graph builder (``graph.task(name, fn,
+    deps=...)``) that executes in topological wavefronts over a scope and
+    hands results back through handles — no shared results dict, no lock.
+
+Grain-size guidance (paper §IV: task bodies of 0.4–6.4 µs): pick ``grain``
+so one *chunk* amounts to at least a few microseconds of work — at Python
+submit overheads, per-index tasks only make sense when the body itself is
+µs-scale (a JAX dispatch, a NumPy kernel, file I/O).
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.core.schedulers import (USAGE_ERRORS, Scheduler,
+                                   SchedulerUsageError, make_scheduler)
+
+__all__ = [
+    "TaskScope",
+    "TaskHandle",
+    "TaskGraph",
+    "TaskGroupError",
+    "TaskCancelledError",
+    "parallel_for",
+    "map_reduce",
+]
+
+
+class TaskGroupError(RuntimeError):
+    """Every task exception from one scope window, re-raised together.
+
+    Python 3.10-compatible stand-in for ``ExceptionGroup``: the individual
+    exceptions (in task-completion order) are on ``.exceptions``.
+    """
+
+    def __init__(self, exceptions: Iterable[BaseException]):
+        self.exceptions: Tuple[BaseException, ...] = tuple(exceptions)
+        kinds = ", ".join(type(e).__name__ for e in self.exceptions)
+        super().__init__(f"{len(self.exceptions)} tasks failed ({kinds})")
+
+
+class TaskCancelledError(RuntimeError):
+    """The task never ran (an upstream dependency failed)."""
+
+
+class TaskHandle:
+    """Lightweight future for one submitted task.
+
+    Completion is signalled by the thread that ran the task, so
+    ``result()`` blocks without involving the scheduler barrier — safe to
+    call from the owning thread at any point, before or after the scope's
+    barrier. A handle whose task failed re-raises that task's exception;
+    the scope-level aggregate still fires at the next barrier regardless
+    of which handles were inspected.
+    """
+
+    __slots__ = ("label", "_event", "_result", "_error")
+
+    def __init__(self, label: Optional[str] = None):
+        self.label = label
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        """True once the task has finished (successfully or not)."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until completion; return the value or re-raise the task's
+        exception. ``timeout`` (seconds) raises ``TimeoutError``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"task {self.label!r} still pending")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        """Block until completion; return the exception (or None)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"task {self.label!r} still pending")
+        return self._error
+
+    def __repr__(self) -> str:
+        state = ("error" if self._error is not None else
+                 "done" if self._event.is_set() else "pending")
+        return f"TaskHandle({self.label!r}, {state})"
+
+    # -- internal (written by the thread that runs the task) ---------------
+    def _finish(self, result: Any, error: Optional[BaseException]) -> None:
+        self._result = result
+        self._error = error
+        self._event.set()
+
+    def _reset(self) -> None:
+        self._event.clear()
+        self._result = None
+        self._error = None
+
+
+class TaskScope:
+    """Structured-concurrency window over one scheduling substrate.
+
+    ::
+
+        with TaskScope("relic") as scope:          # or "spin"/"condvar"/...
+            h = scope.submit(fn, x)                # -> TaskHandle
+            parallel_for(scope, n, body, grain=g)  # worksharing loop
+            ...                                    # main thread's own share
+        # scope exit == barrier: everything completed, errors raised here
+
+    ``scheduler`` is a registry name (the scope instantiates, starts and
+    closes the substrate) or a ``Scheduler`` instance — started instances
+    are *borrowed* (the scope barriers on them but never closes them, so a
+    long-lived substrate can host many scopes), not-yet-started instances
+    are adopted (started now, closed with the scope).
+
+    Error model: the task wrapper captures every task exception, so the
+    substrate's first-error-wins ``wait()`` never fires for scope tasks.
+    ``barrier()`` (and scope exit) re-raises a single failure as itself
+    and multiple failures as :class:`TaskGroupError` listing all of them.
+    If the ``with`` body itself raises, in-flight tasks are still drained
+    but the body's exception wins; task errors stay observable on
+    ``scope.errors`` until the next ``barrier()``.
+
+    A scope is also usable without ``with`` (e.g. a long-lived member of
+    ``CheckpointManager``): call ``barrier()`` per window and ``close()``
+    at end of life. ``submit``/``barrier`` are owning-thread-only and
+    tasks must not submit, mirroring the SPI (paper §VI-A).
+    """
+
+    def __init__(self, scheduler: Union[str, Scheduler] = "relic",
+                 **scheduler_kwargs: Any):
+        if isinstance(scheduler, str):
+            self._sched: Scheduler = make_scheduler(scheduler, **scheduler_kwargs)
+            self._sched.start()
+            self._owns = True
+        else:
+            if scheduler_kwargs:
+                raise TypeError(
+                    "scheduler kwargs only apply when constructing by name; "
+                    f"got an instance plus {sorted(scheduler_kwargs)}")
+            self._sched = scheduler
+            try:
+                self._sched.start()
+                self._owns = True           # adopted: we started it
+            except USAGE_ERRORS:
+                self._owns = False          # borrowed: already running
+        self.substrate: str = getattr(self._sched, "name", type(self._sched).__name__)
+        self._errors: List[BaseException] = []
+        self._err_lock = threading.Lock()
+        self._closed = False
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def scheduler(self) -> Scheduler:
+        """The underlying substrate (the low-level SPI escape hatch)."""
+        return self._sched
+
+    @property
+    def stats(self):
+        return self._sched.stats
+
+    @property
+    def errors(self) -> Tuple[BaseException, ...]:
+        """Task errors captured since the last ``barrier()`` (unraised)."""
+        with self._err_lock:
+            return tuple(self._errors)
+
+    # -- submission --------------------------------------------------------
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> TaskHandle:
+        """Enqueue ``fn(*args, **kwargs)`` on the substrate; returns a
+        :class:`TaskHandle` that completes when the task does."""
+        handle = TaskHandle(label=getattr(fn, "__name__", None))
+        self._submit_into(handle, fn, args, kwargs)
+        return handle
+
+    def _submit_into(self, handle: TaskHandle, fn: Callable[..., Any],
+                     args: tuple, kwargs: dict) -> None:
+        if self._closed:
+            raise SchedulerUsageError("submit() on a closed TaskScope")
+        self._sched.submit(self._run_into, handle, fn, args, kwargs)
+
+    def _run_into(self, handle: TaskHandle, fn: Callable[..., Any],
+                  args: tuple, kwargs: dict) -> None:
+        # Runs on a worker (or, for producer-participates, the owning
+        # thread). Exceptions are captured for the scope aggregate, so the
+        # substrate's single-error channel stays empty.
+        try:
+            out = fn(*args, **kwargs)
+        except BaseException as e:
+            with self._err_lock:
+                self._errors.append(e)
+            handle._finish(None, e)
+        else:
+            handle._finish(out, None)
+
+    def run_inline(self, fn: Callable[..., Any], *args: Any,
+                   **kwargs: Any) -> TaskHandle:
+        """Run ``fn`` on the calling thread under the scope's error
+        aggregation (the producer-participates half of a wavefront)."""
+        if self._closed:
+            raise SchedulerUsageError("run_inline() on a closed TaskScope")
+        handle = TaskHandle(label=getattr(fn, "__name__", None))
+        self._run_into(handle, fn, args, kwargs)
+        return handle
+
+    # -- synchronization ---------------------------------------------------
+    def barrier(self) -> None:
+        """Block until every task submitted so far has completed, then
+        re-raise captured task errors (one directly, several as
+        :class:`TaskGroupError`) and clear them. The scope stays usable."""
+        self._sched.wait()
+        self._raise_errors()
+
+    def _raise_errors(self) -> None:
+        with self._err_lock:
+            errs, self._errors = self._errors, []
+        if len(errs) == 1:
+            raise errs[0]
+        if errs:
+            raise TaskGroupError(errs)
+
+    def _drain(self) -> None:
+        """Wait for in-flight tasks without raising (body-exception path)."""
+        try:
+            self._sched.wait()
+        except BaseException:
+            pass  # body error wins; task errors remain on scope.errors
+
+    def _wait_handles(self, handles: List[TaskHandle]) -> None:
+        """Join exactly these tasks and raise only *their* errors (removed
+        from the scope aggregate so they don't re-raise at the barrier).
+        Errors from unrelated scope tasks stay queued for ``barrier()`` —
+        this is how worksharing constructs avoid misattributing a failed
+        sibling to the loop."""
+        if not all(h._event.is_set() for h in handles):
+            # Advisory hints must never deadlock a join (same rule as the
+            # SPI's wait()): un-park a sleeping worker before blocking.
+            self._sched.wake_up_hint()
+        for h in handles:
+            h._event.wait()
+        errs = [h._error for h in handles if h._error is not None]
+        if not errs:
+            return
+        with self._err_lock:
+            for e in errs:
+                try:
+                    self._errors.remove(e)   # identity: default __eq__
+                except ValueError:
+                    pass                     # already consumed by a barrier
+        if len(errs) == 1:
+            raise errs[0]
+        raise TaskGroupError(errs)
+
+    # -- hints (paper §VI-B, advisory) -------------------------------------
+    def sleep_hint(self) -> None:
+        self._sched.sleep_hint()
+
+    def wake_up_hint(self) -> None:
+        self._sched.wake_up_hint()
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent; closes the substrate only if this scope owns it."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._owns:
+            self._sched.close()
+
+    def __enter__(self) -> "TaskScope":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        try:
+            if exc_type is None:
+                self.barrier()
+            else:
+                self._drain()
+        finally:
+            self.close()
+
+
+# ------------------------------------------------------------- worksharing
+
+def _chunk_ranges(n: int, grain: int) -> List[Tuple[int, int]]:
+    return [(lo, min(lo + grain, n)) for lo in range(0, n, grain)]
+
+
+def _resolve_grain(n: int, grain: Optional[int]) -> int:
+    if grain is None:
+        # Default: split in two — the producer's half plus the assistant's
+        # half, the paper's SMT-pair shape. Explicit grain is the knob the
+        # grain-sweep benchmark turns (benchmarks/run.py --only grain).
+        return max(1, math.ceil(n / 2))
+    if grain <= 0:
+        raise ValueError(f"grain must be positive, got {grain}")
+    return grain
+
+
+def parallel_for(scope: TaskScope, n: int, body: Callable[[int], Any],
+                 *, grain: Optional[int] = None) -> None:
+    """Worksharing loop: run ``body(i)`` for ``i in range(n)`` over the
+    scope's substrate, chunked by ``grain`` indices per task.
+
+    All chunks but the last are submitted; the calling thread runs the
+    final chunk itself (producer-participates, paper §VI), then joins the
+    loop's own chunks — on return every index has run, and body
+    exceptions (only the loop's, never an unrelated sibling task's) are
+    raised under the scope's aggregation rules. With ``n <= grain`` the
+    whole loop runs inline on the caller (zero submissions); ``n == 0``
+    is a pure no-op.
+    """
+    if n < 0:
+        raise ValueError(f"n must be non-negative, got {n}")
+    if n == 0:
+        return
+    ranges = _chunk_ranges(n, _resolve_grain(n, grain))
+
+    def run_chunk(lo: int, hi: int) -> None:
+        for i in range(lo, hi):
+            body(i)
+
+    handles = []
+    for lo, hi in ranges[:-1]:
+        h = TaskHandle(label=f"parallel_for[{lo}:{hi}]")
+        scope._submit_into(h, run_chunk, (lo, hi), {})
+        handles.append(h)
+    lo, hi = ranges[-1]
+    h = TaskHandle(label=f"parallel_for[{lo}:{hi}]")
+    scope._run_into(h, run_chunk, (lo, hi), {})
+    handles.append(h)
+    scope._wait_handles(handles)
+
+
+_MISSING = object()
+
+
+def map_reduce(scope: TaskScope, n: int, map_fn: Callable[[int], Any],
+               reduce_fn: Callable[[Any, Any], Any], *,
+               init: Any = _MISSING, grain: Optional[int] = None) -> Any:
+    """Chunked map + reduce: each chunk folds ``map_fn`` over its indices
+    with ``reduce_fn`` locally (the caller runs the final chunk), then the
+    partials are combined on the calling thread in chunk order — so the
+    result is deterministic for any associative ``reduce_fn``, on every
+    substrate. ``init`` seeds the combine (required when ``n == 0``)."""
+    if n < 0:
+        raise ValueError(f"n must be non-negative, got {n}")
+    if n == 0:
+        if init is _MISSING:
+            raise ValueError("map_reduce over an empty range requires init")
+        return init
+    ranges = _chunk_ranges(n, _resolve_grain(n, grain))
+    partials: List[Any] = [None] * len(ranges)  # one slot per chunk: no lock
+
+    def run_chunk(ci: int, lo: int, hi: int) -> None:
+        acc = map_fn(lo)
+        for i in range(lo + 1, hi):
+            acc = reduce_fn(acc, map_fn(i))
+        partials[ci] = acc
+
+    handles = []
+    for ci, (lo, hi) in enumerate(ranges[:-1]):
+        h = TaskHandle(label=f"map_reduce[{lo}:{hi}]")
+        scope._submit_into(h, run_chunk, (ci, lo, hi), {})
+        handles.append(h)
+    ci = len(ranges) - 1
+    lo, hi = ranges[-1]
+    h = TaskHandle(label=f"map_reduce[{lo}:{hi}]")
+    scope._run_into(h, run_chunk, (ci, lo, hi), {})
+    handles.append(h)
+    scope._wait_handles(handles)
+    acc = init
+    for p in partials:
+        acc = p if acc is _MISSING else reduce_fn(acc, p)
+    return acc
+
+
+# --------------------------------------------------------------- TaskGraph
+
+class _Node:
+    __slots__ = ("name", "fn", "deps", "handle")
+
+    def __init__(self, name: str, fn: Callable[..., Any],
+                 deps: Tuple[str, ...]):
+        self.name = name
+        self.fn = fn
+        self.deps = deps
+        self.handle = TaskHandle(label=name)
+
+
+class TaskGraph:
+    """Dependency-graph builder executed in topological wavefronts.
+
+    ::
+
+        g = TaskGraph()
+        a = g.task("a", load)
+        b = g.task("b", transform, deps=("a",))     # names or handles
+        c = g.task("c", combine, deps=(a, b))
+        results = g.run("relic")                    # {"a": ..., "b": ...}
+        b.result()                                  # or through the handle
+
+    ``task()`` returns the node's :class:`TaskHandle`; each task function
+    receives its dependencies' results positionally, in ``deps`` order.
+    Dependencies must already be in the graph when a task is added, so a
+    ``TaskGraph`` is acyclic by construction (the legacy dict-of-tuples
+    front door, ``repro.tasks.graph.run_wavefronts``, topo-sorts and
+    reports cycles before building one of these).
+
+    ``run()`` accepts a :class:`TaskScope` (reused, left open), a registry
+    name, or a ``Scheduler`` instance (a scope is created around it for
+    the duration). Within a wavefront, all tasks but one are submitted and
+    the calling thread runs the last itself; the scope barrier separates
+    wavefronts. On failure the aggregate error propagates and every
+    never-run task's handle completes with :class:`TaskCancelledError`.
+    A graph may be ``run()`` repeatedly (handles are reset per run); runs
+    are not reentrant.
+    """
+
+    def __init__(self) -> None:
+        self._nodes: Dict[str, _Node] = {}
+
+    def task(self, name: str, fn: Callable[..., Any],
+             deps: Iterable[Union[str, TaskHandle]] = ()) -> TaskHandle:
+        """Add ``name`` running ``fn(*dep_results)``; returns its handle."""
+        if name in self._nodes:
+            raise ValueError(f"duplicate task {name!r}")
+        dep_names: List[str] = []
+        for d in deps:
+            dep = d.label if isinstance(d, TaskHandle) else d
+            if dep not in self._nodes:
+                raise ValueError(f"task {name!r} depends on unknown {dep!r}")
+            if isinstance(d, TaskHandle) and self._nodes[dep].handle is not d:
+                raise ValueError(
+                    f"task {name!r}: dependency handle {dep!r} does not "
+                    "belong to this graph")
+            dep_names.append(dep)
+        node = _Node(name, fn, tuple(dep_names))
+        self._nodes[name] = node
+        return node.handle
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._nodes
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._nodes)
+
+    def handle(self, name: str) -> TaskHandle:
+        return self._nodes[name].handle
+
+    def run(self, scope: Union[TaskScope, str, Scheduler] = "relic",
+            **scope_kwargs: Any) -> Dict[str, Any]:
+        """Execute the graph; returns ``{name: result}``."""
+        if isinstance(scope, TaskScope):
+            if scope_kwargs:
+                raise TypeError("scope kwargs only apply when run() builds "
+                                "the TaskScope itself")
+            return self._run(scope)
+        with TaskScope(scope, **scope_kwargs) as s:
+            return self._run(s)
+
+    def _run(self, scope: TaskScope) -> Dict[str, Any]:
+        for node in self._nodes.values():
+            node.handle._reset()
+        remaining = dict(self._nodes)
+        done: set = set()
+        try:
+            while remaining:
+                wave = [node for node in remaining.values()
+                        if all(d in done for d in node.deps)]
+                # acyclic by construction => every round makes progress
+                for node in wave[:-1]:
+                    args = tuple(self._nodes[d].handle.result()
+                                 for d in node.deps)
+                    scope._submit_into(node.handle, node.fn, args, {})
+                last = wave[-1]
+                args = tuple(self._nodes[d].handle.result() for d in last.deps)
+                scope._run_into(last.handle, last.fn, args, {})
+                scope.barrier()
+                for node in wave:
+                    done.add(node.name)
+                    del remaining[node.name]
+        finally:
+            for node in remaining.values():
+                if not node.handle.done():
+                    node.handle._finish(None, TaskCancelledError(
+                        f"task {node.name!r} never ran (an upstream "
+                        f"dependency failed)"))
+        return {name: node.handle.result() for name, node in self._nodes.items()}

@@ -180,87 +180,87 @@ def betweenness_centrality(adj: jax.Array, source: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# Dependency-aware wavefront driver: GAP kernels over any Scheduler substrate.
+# Dependency-aware wavefront execution: GAP kernels over the tasking façade.
 # ---------------------------------------------------------------------------
 
 def run_wavefronts(tasks, scheduler):
-    """Execute a host task graph over any ``repro.core.schedulers`` substrate.
+    """Legacy dict-of-tuples front door for wavefront execution.
 
-    ``tasks`` maps name -> ``(fn, deps)`` where ``deps`` is a sequence of
-    task names; ``fn`` receives its dependencies' results positionally (in
-    ``deps`` order). Tasks whose dependencies are all resolved form a
-    *wavefront*: all but one are submitted to ``scheduler`` and the last
-    runs on the calling (producer) thread — the paper's
-    producer-participates pattern (main thread does its own half of the
-    work, §VI). A ``scheduler.wait()`` barrier separates wavefronts.
-
-    Returns ``{name: result}``. Raises ``ValueError`` on unknown
-    dependencies or cycles. The scheduler must already be started; it is
-    left running (callers own its lifecycle).
+    ``tasks`` maps name -> ``(fn, deps)``; ``fn`` receives its
+    dependencies' results positionally (in ``deps`` order). This shim
+    validates the dict (``ValueError`` on unknown dependencies or cycles,
+    as always), topo-sorts it into a :class:`repro.tasks.api.TaskGraph`,
+    and executes it over ``scheduler`` through a borrowed
+    :class:`repro.tasks.api.TaskScope` — new code should build the
+    ``TaskGraph`` directly (see ``gap_task_graph``). The scheduler must
+    already be started; it is left running (callers own its lifecycle).
+    Returns ``{name: result}``.
     """
+    from repro.tasks.api import TaskGraph, TaskScope
+
     for name, (_, deps) in tasks.items():
         for d in deps:
             if d not in tasks:
                 raise ValueError(f"task {name!r} depends on unknown {d!r}")
 
-    import threading
+    g = TaskGraph()
+    pending = dict(tasks)
+    while pending:
+        ready = [n for n, (_, deps) in pending.items()
+                 if all(d in g for d in deps)]
+        if not ready:
+            raise ValueError(f"dependency cycle among {sorted(pending)}")
+        for n in ready:
+            fn, deps = pending.pop(n)
+            g.task(n, fn, deps=tuple(deps))
 
-    results: dict = {}
-    results_lock = threading.Lock()  # pool workers write concurrently
-    remaining = dict(tasks)
-    while remaining:
-        wave = [n for n, (_, deps) in remaining.items()
-                if all(d in results for d in deps)]
-        if not wave:
-            raise ValueError(
-                f"dependency cycle among {sorted(remaining)}")
-
-        def _run(name, fn, deps):
-            out = fn(*[results[d] for d in deps])  # deps: earlier waves only
-            with results_lock:
-                results[name] = out
-
-        for name in wave[:-1]:
-            fn, deps = remaining[name]
-            scheduler.submit(_run, name, fn, tuple(deps))
-        last = wave[-1]
-        _run(last, *remaining[last])
-        scheduler.wait()
-        for name in wave:
-            del remaining[name]
-    return results
+    from repro.core.schedulers import SchedulerUsageError
+    if not getattr(scheduler, "_started", True):
+        # Wrapping in a TaskScope would silently adopt (then close) an
+        # unstarted scheduler; the documented contract is loud instead.
+        raise SchedulerUsageError(
+            "run_wavefronts() requires a started scheduler "
+            "(callers own its lifecycle)")
+    scope = TaskScope(scheduler)  # started instance => borrowed, not closed
+    try:
+        return g.run(scope)
+    finally:
+        scope.close()
 
 
 def gap_task_graph(adj: jax.Array, w: jax.Array, source: int = 0):
-    """The paper's GAP kernel suite as a ``run_wavefronts`` task graph.
+    """The paper's GAP kernel suite as a :class:`repro.tasks.api.TaskGraph`.
 
     Wave 1 runs the five independent kernels; wave 2 runs betweenness
     centrality (reusing nothing device-side, but gated on ``bfs`` so the
     graph actually exercises dependencies) and a ``summary`` reduction over
     every kernel's output. Each task blocks on its device result so the
-    scheduler measures real completion, not async dispatch.
+    scheduler measures real completion, not async dispatch. Run it with
+    ``gap_task_graph(adj, w).run(scope_or_substrate)``.
     """
+    from repro.tasks.api import TaskGraph
 
     def done(x):
         return jax.block_until_ready(x)
 
-    return {
-        "bfs": (lambda: done(bfs(adj, source)), ()),
-        "cc": (lambda: done(connected_components(adj)), ()),
-        "pagerank": (lambda: done(pagerank(adj)), ()),
-        "sssp": (lambda: done(sssp(w, source)), ()),
-        "tc": (lambda: done(triangle_count(adj)), ()),
-        "bc": (lambda _bfs: done(betweenness_centrality(adj, source)),
-               ("bfs",)),
-        "summary": (
-            lambda b, c, pr, d, t, bc_: {
-                "reached": int((np.asarray(b) >= 0).sum()),
-                "components": int(len(np.unique(np.asarray(c)))),
-                "pr_mass": float(np.asarray(pr).sum()),
-                "finite_paths": int((np.asarray(d) < 1e8).sum()),
-                "triangles": float(t),
-                "max_bc": float(np.asarray(bc_).max()),
-            },
-            ("bfs", "cc", "pagerank", "sssp", "tc", "bc"),
-        ),
-    }
+    g = TaskGraph()
+    g.task("bfs", lambda: done(bfs(adj, source)))
+    g.task("cc", lambda: done(connected_components(adj)))
+    g.task("pagerank", lambda: done(pagerank(adj)))
+    g.task("sssp", lambda: done(sssp(w, source)))
+    g.task("tc", lambda: done(triangle_count(adj)))
+    g.task("bc", lambda _bfs: done(betweenness_centrality(adj, source)),
+           deps=("bfs",))
+    g.task(
+        "summary",
+        lambda b, c, pr, d, t, bc_: {
+            "reached": int((np.asarray(b) >= 0).sum()),
+            "components": int(len(np.unique(np.asarray(c)))),
+            "pr_mass": float(np.asarray(pr).sum()),
+            "finite_paths": int((np.asarray(d) < 1e8).sum()),
+            "triangles": float(t),
+            "max_bc": float(np.asarray(bc_).max()),
+        },
+        deps=("bfs", "cc", "pagerank", "sssp", "tc", "bc"),
+    )
+    return g

@@ -229,7 +229,9 @@ def test_stress_10k_tasks(name):
 
 @pytest.mark.parametrize("name", ALL)
 def test_wavefront_driver_runs_on_every_substrate(name):
-    """run_wavefronts respects dependencies on any substrate."""
+    """The legacy dict-of-tuples run_wavefronts entry point (now a shim
+    over repro.tasks.api.TaskGraph — see tests/test_tasks_api.py for the
+    façade's own suite) respects dependencies on any substrate."""
     order = []
     lock = threading.Lock()
 

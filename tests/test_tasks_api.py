@@ -1,0 +1,421 @@
+"""Façade conformance suite for ``repro.tasks.api``, run against every
+registered substrate: scope-exit barrier, future results, per-scope error
+aggregation (both errors survive, not last-error-wins), grain chunking
+edge cases, and producer-participates execution. Mirrors the SPI suite in
+``tests/test_schedulers_conformance.py`` one layer up."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.schedulers import (USAGE_ERRORS, available_schedulers,
+                                   make_scheduler)
+from repro.tasks.api import (TaskCancelledError, TaskGraph, TaskGroupError,
+                             TaskScope, map_reduce, parallel_for)
+
+ALL = available_schedulers()
+
+
+# ----------------------------------------------------------------- TaskScope
+
+@pytest.mark.parametrize("name", ALL)
+def test_scope_exit_is_the_barrier(name):
+    done = []
+    with TaskScope(name) as scope:
+        for i in range(50):
+            scope.submit(lambda i=i: (time.sleep(0.0001), done.append(i)))
+    assert sorted(done) == list(range(50))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_handles_carry_results(name):
+    with TaskScope(name) as scope:
+        hs = [scope.submit(lambda i=i: i * i) for i in range(20)]
+        scope.barrier()
+        assert all(h.done() for h in hs)
+        assert [h.result() for h in hs] == [i * i for i in range(20)]
+        assert all(h.exception() is None for h in hs)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_handle_result_blocks_until_done(name):
+    with TaskScope(name) as scope:
+        h = scope.submit(lambda: (time.sleep(0.02), "slow")[1])
+        # no barrier: result() must synchronize on its own
+        assert h.result(timeout=5) == "slow"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_two_failing_tasks_surface_both_errors(name):
+    with TaskScope(name) as scope:
+        scope.submit(lambda: (_ for _ in ()).throw(KeyError("first")))
+        scope.submit(lambda: 1 / 0)
+        with pytest.raises(TaskGroupError) as ei:
+            scope.barrier()
+    kinds = {type(e) for e in ei.value.exceptions}
+    assert kinds == {KeyError, ZeroDivisionError}
+    assert len(ei.value.exceptions) == 2
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_single_error_reraises_bare(name):
+    with TaskScope(name) as scope:
+        scope.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            scope.barrier()
+        # cleared: the scope stays usable
+        h = scope.submit(lambda: "after")
+        scope.barrier()
+        assert h.result() == "after"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_handle_result_after_failed_sibling(name):
+    with TaskScope(name) as scope:
+        bad = scope.submit(lambda: 1 / 0)
+        good = scope.submit(lambda: 41 + 1)
+        assert good.result(timeout=5) == 42   # sibling failure doesn't poison
+        with pytest.raises(ZeroDivisionError):
+            bad.result(timeout=5)
+        with pytest.raises(ZeroDivisionError):
+            scope.barrier()                   # aggregate still fires
+        assert isinstance(bad.exception(), ZeroDivisionError)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scope_exit_raises_aggregate(name):
+    with pytest.raises(TaskGroupError):
+        with TaskScope(name) as scope:
+            scope.submit(lambda: 1 / 0)
+            scope.submit(lambda: (_ for _ in ()).throw(OSError("disk")))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_body_exception_wins_but_tasks_drain(name):
+    done = []
+    with pytest.raises(RuntimeError, match="body"):
+        with TaskScope(name) as scope:
+            for i in range(20):
+                scope.submit(lambda i=i: (time.sleep(0.0005), done.append(i)))
+            raise RuntimeError("body failed")
+    assert sorted(done) == list(range(20))    # drained despite body error
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_borrowed_scheduler_is_not_closed(name):
+    sched = make_scheduler(name).start()
+    try:
+        with TaskScope(sched) as scope:
+            h = scope.submit(lambda: "in-scope")
+        assert h.result() == "in-scope"
+        # still running: the raw SPI remains usable after the scope closes
+        done = []
+        sched.submit(done.append, "raw")
+        sched.wait()
+        assert done == ["raw"]
+    finally:
+        sched.close()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_adopted_instance_is_closed_with_scope(name):
+    sched = make_scheduler(name)               # not started: scope adopts it
+    with TaskScope(sched) as scope:
+        scope.submit(lambda: None)
+    with pytest.raises(USAGE_ERRORS):
+        sched.submit(lambda: None)             # closed with the scope
+
+
+def test_scope_kwargs_reach_the_registry():
+    with TaskScope("relic", capacity=4) as scope:
+        for i in range(32):                    # > capacity: backpressure path
+            scope.submit(time.sleep, 0.0001)
+    with pytest.raises(TypeError, match="kwargs"):
+        TaskScope(make_scheduler("serial"), capacity=4)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_after_close_raises(name):
+    scope = TaskScope(name)
+    scope.close()
+    with pytest.raises(USAGE_ERRORS):
+        scope.submit(lambda: None)
+
+
+# -------------------------------------------------------------- parallel_for
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_nondivisible_chunking_covers_range(name):
+    seen = []
+    lock = threading.Lock()
+
+    def body(i):
+        with lock:
+            seen.append(i)
+
+    with TaskScope(name) as scope:
+        parallel_for(scope, 10, body, grain=3)   # chunks 3+3+3+1
+        assert scope.stats.submitted == 3        # final chunk ran inline
+    assert sorted(seen) == list(range(10))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_n_zero_is_noop(name):
+    with TaskScope(name) as scope:
+        parallel_for(scope, 0, lambda i: pytest.fail("body ran"), grain=4)
+        assert scope.stats.submitted == 0
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_n_below_grain_runs_inline(name):
+    idents = []
+    with TaskScope(name) as scope:
+        parallel_for(scope, 3, lambda i: idents.append(threading.get_ident()),
+                     grain=100)
+        assert scope.stats.submitted == 0        # zero submissions
+    assert idents == [threading.get_ident()] * 3  # all on the caller
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_producer_participates(name):
+    """The calling thread runs the final chunk itself (paper §VI)."""
+    ident_by_index = {}
+    lock = threading.Lock()
+
+    def body(i):
+        with lock:
+            ident_by_index[i] = threading.get_ident()
+
+    with TaskScope(name) as scope:
+        parallel_for(scope, 8, body, grain=2)
+    main = threading.get_ident()
+    assert ident_by_index[6] == main and ident_by_index[7] == main
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_default_grain_splits_in_two(name):
+    with TaskScope(name) as scope:
+        parallel_for(scope, 9, lambda i: None)   # grain=None -> ceil(9/2)=5
+        assert scope.stats.submitted == 1        # one chunk + inline chunk
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_aggregates_chunk_errors(name):
+    def body(i):
+        if i in (1, 7):                          # distinct chunks at grain=2
+            raise ValueError(f"bad index {i}")
+
+    with TaskScope(name) as scope:
+        with pytest.raises(TaskGroupError) as ei:
+            parallel_for(scope, 8, body, grain=2)
+        assert {str(e) for e in ei.value.exceptions} == \
+            {"bad index 1", "bad index 7"}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_does_not_adopt_sibling_errors(name):
+    """A failed sibling task must not be misattributed to the loop: the
+    loop completes cleanly and the sibling's error still fires at the
+    scope barrier."""
+    seen = []
+    lock = threading.Lock()
+    with TaskScope(name) as scope:
+        scope.submit(lambda: 1 / 0)              # unrelated flaky sibling
+        parallel_for(scope, 6,
+                     lambda i: (lock.acquire(), seen.append(i),
+                                lock.release()), grain=2)  # must NOT raise
+        assert sorted(seen) == list(range(6))
+        with pytest.raises(ZeroDivisionError):
+            scope.barrier()                      # sibling error kept for here
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_errors_do_not_rearm_the_barrier(name):
+    """Loop errors raised by parallel_for are consumed: the next barrier
+    does not raise them again."""
+    with TaskScope(name) as scope:
+        with pytest.raises(ValueError):
+            parallel_for(scope, 4, lambda i: (_ for _ in ()).throw(
+                ValueError("boom")), grain=4)
+        scope.barrier()                          # nothing left to raise
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_completes_with_parked_worker(name):
+    """Advisory sleep_hint must not deadlock the loop's join (the SPI
+    wait() rule, held by the façade too)."""
+    seen = []
+    lock = threading.Lock()
+    with TaskScope(name) as scope:
+        scope.sleep_hint()
+        time.sleep(0.02)  # let the worker actually park
+        parallel_for(scope, 8,
+                     lambda i: (lock.acquire(), seen.append(i),
+                                lock.release()), grain=2)
+    assert sorted(seen) == list(range(8))
+
+
+def test_parallel_for_rejects_bad_arguments():
+    with TaskScope("serial") as scope:
+        with pytest.raises(ValueError, match="non-negative"):
+            parallel_for(scope, -1, lambda i: None)
+        with pytest.raises(ValueError, match="grain"):
+            parallel_for(scope, 4, lambda i: None, grain=0)
+
+
+# ---------------------------------------------------------------- map_reduce
+
+@pytest.mark.parametrize("name", ALL)
+def test_map_reduce_sum_of_squares(name):
+    with TaskScope(name) as scope:
+        got = map_reduce(scope, 100, lambda i: i * i, lambda a, b: a + b,
+                         grain=7)
+    assert got == sum(i * i for i in range(100))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_map_reduce_with_init_and_empty_range(name):
+    with TaskScope(name) as scope:
+        assert map_reduce(scope, 10, lambda i: i, lambda a, b: a + b,
+                          init=1000, grain=4) == 1000 + sum(range(10))
+        assert map_reduce(scope, 0, lambda i: i, lambda a, b: a + b,
+                          init=5) == 5
+        with pytest.raises(ValueError, match="init"):
+            map_reduce(scope, 0, lambda i: i, lambda a, b: a + b)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_map_reduce_deterministic_chunk_order(name):
+    """Non-commutative reduce: chunk-order combine keeps it deterministic."""
+    with TaskScope(name) as scope:
+        got = map_reduce(scope, 26, lambda i: chr(ord("a") + i),
+                         lambda a, b: a + b, grain=5)
+    assert got == "abcdefghijklmnopqrstuvwxyz"
+
+
+# ----------------------------------------------------------------- TaskGraph
+
+@pytest.mark.parametrize("name", ALL)
+def test_taskgraph_diamond_respects_dependencies(name):
+    order = []
+    lock = threading.Lock()
+
+    def mark(label, *deps):
+        with lock:
+            order.append(label)
+        return label
+
+    g = TaskGraph()
+    a = g.task("a", lambda: mark("a"))
+    g.task("b", lambda: mark("b"))
+    c = g.task("c", lambda a_, b_: mark("c", a_, b_), deps=(a, "b"))
+    g.task("d", lambda c_: mark("d", c_), deps=(c,))
+    results = g.run(name)
+    assert results == {"a": "a", "b": "b", "c": "c", "d": "d"}
+    assert set(order[:2]) == {"a", "b"} and order[2:] == ["c", "d"]
+    assert a.result() == "a" and c.done()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_taskgraph_passes_dep_results_positionally(name):
+    g = TaskGraph()
+    g.task("x", lambda: 3)
+    g.task("y", lambda: 4)
+    g.task("hyp2", lambda x, y: x * x + y * y, deps=("x", "y"))
+    assert g.run(name)["hyp2"] == 25
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_taskgraph_failure_cancels_dependents(name):
+    g = TaskGraph()
+    g.task("ok", lambda: "fine")
+    g.task("boom", lambda: 1 / 0)
+    orphan = g.task("orphan", lambda b: b, deps=("boom",))
+    with TaskScope(name) as scope:
+        with pytest.raises(ZeroDivisionError):
+            g.run(scope)
+    assert orphan.done()
+    with pytest.raises(TaskCancelledError):
+        orphan.result()
+    assert g.handle("ok").result() == "fine"    # the sibling still completed
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_taskgraph_is_rerunnable(name):
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def bump():
+        with lock:
+            calls["n"] += 1
+        return calls["n"]
+
+    g = TaskGraph()
+    g.task("t", bump)
+    g.task("u", lambda t: t, deps=("t",))
+    with TaskScope(name) as scope:
+        first = g.run(scope)
+        second = g.run(scope)
+    assert first["t"] == 1 and second["t"] == 2 and second["u"] == 2
+
+
+def test_taskgraph_builder_validation():
+    g = TaskGraph()
+    g.task("a", lambda: None)
+    with pytest.raises(ValueError, match="duplicate"):
+        g.task("a", lambda: None)
+    with pytest.raises(ValueError, match="unknown"):
+        g.task("b", lambda x: x, deps=("ghost",))
+    assert "a" in g and len(g) == 1 and g.names == ("a",)
+
+
+def test_taskgraph_rejects_foreign_handles():
+    """A handle whose label collides with a node name must not silently
+    bind: only this graph's own handles are accepted as deps."""
+    g1, g2 = TaskGraph(), TaskGraph()
+    foreign = g1.task("a", lambda: "g1-a")
+    g2.task("a", lambda: "g2-a")
+    with pytest.raises(ValueError, match="does not belong"):
+        g2.task("c", lambda a: a, deps=(foreign,))
+    with TaskScope("serial") as scope:
+        stray = scope.submit(lambda: "stray")
+        stray.label = "a"                        # adversarial label collision
+        with pytest.raises(ValueError, match="does not belong"):
+            g2.task("d", lambda a: a, deps=(stray,))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_run_wavefronts_requires_started_scheduler(name):
+    from repro.tasks.graph import run_wavefronts
+
+    with pytest.raises(USAGE_ERRORS, match="started"):
+        run_wavefronts({"a": (lambda: 1, ())}, make_scheduler(name))
+
+
+def test_taskgraph_empty_run_returns_empty():
+    assert TaskGraph().run("serial") == {}
+
+
+# ------------------------------------------------- producer-participates mix
+
+@pytest.mark.parametrize("name", ALL)
+def test_scope_mixes_submit_inline_and_worksharing(name):
+    """The shape of a real workload: futures + own work + a chunked loop
+    in one scope window, errors clean, counters exact."""
+    acc = []
+    lock = threading.Lock()
+
+    def add(x):
+        with lock:
+            acc.append(x)
+
+    with TaskScope(name) as scope:
+        h = scope.submit(lambda: "future")
+        scope.run_inline(add, "inline")
+        parallel_for(scope, 6, lambda i: add(i), grain=2)
+        scope.barrier()
+        assert h.result() == "future"
+    assert sorted(a for a in acc if isinstance(a, int)) == list(range(6))
+    assert "inline" in acc
+    assert scope.stats.task_errors == 0
