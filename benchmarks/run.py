@@ -122,7 +122,78 @@ def run_spsc(iters: int, em: Emitter):
     em.header("spsc: scheduling overhead on a trivial task")
     for k, v in res.items():
         em.row(f"spsc/{k}", v, f"overhead_vs_serial={v - res['serial']:.2f}us")
+    run_spsc_overhead(iters, em)
     return res
+
+
+def run_spsc_overhead(iters: int, em: Emitter):
+    """The per-task overhead table (ns per submit+wait round-trip): for each
+    registered substrate, the raw-SPI single path (one submit() per task),
+    the raw-SPI batch path (one submit_many() burst per window), and the
+    façade path (one TaskHandle per task through TaskScope.submit). Empty
+    Python task, so the number is pure scheduling cost — the floor the
+    grain-size guidance in docs/EXPERIMENTS.md is derived from."""
+    from repro.core.schedulers import available_schedulers, make_scheduler
+    from repro.tasks.api import TaskScope
+
+    window = 64                       # tasks per submit+wait window (< ring 128)
+    reps = max(iters // 4, 25)        # windows per timed pass
+    warmup = max(reps // 6, 5)
+    rounds = 5                        # min over interleaved rounds (see below)
+
+    def nop():
+        pass
+
+    batch_tasks = [(nop, (), {})] * window
+
+    def time_variants(variants):
+        """Time each named window-runner; returns {name: ns_per_task}.
+
+        One *round* times every variant back-to-back, and the reported
+        number is the min over rounds — so a noisy-neighbour phase (this
+        is a shared container) degrades all variants of a round together
+        instead of skewing their comparison."""
+        best = {k: float("inf") for k in variants}
+        for _ in range(rounds):
+            for key, run_window in variants.items():
+                for _ in range(warmup):
+                    run_window()
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    run_window()
+                ns = (time.perf_counter() - t0) / (reps * window) * 1e9
+                best[key] = min(best[key], ns)
+        return best
+
+    em.header("spsc/overhead: ns per submit+wait round-trip "
+              f"(empty task, window={window})")
+    for name in available_schedulers():
+        with make_scheduler(name) as sched:
+            def spi_single(sched=sched):
+                for _ in range(window):
+                    sched.submit(nop)
+                sched.wait()
+
+            def spi_batch(sched=sched):
+                sched.submit_many(batch_tasks)
+                sched.wait()
+
+            spi = time_variants({"single": spi_single, "batch": spi_batch})
+        with TaskScope(name) as scope:
+            def facade(scope=scope):
+                for _ in range(window):
+                    scope.submit(nop)
+                scope.barrier()
+
+            ns_facade = time_variants({"facade": facade})["facade"]
+        ns_single, ns_batch = spi["single"], spi["batch"]
+        em.row(f"spsc/overhead/{name}/single", ns_single / 1e3,
+               f"ns_per_task={ns_single:.0f}")
+        em.row(f"spsc/overhead/{name}/batch", ns_batch / 1e3,
+               f"ns_per_task={ns_batch:.0f}"
+               f";batch_vs_single={ns_batch / ns_single - 1:+.1%}")
+        em.row(f"spsc/facade/{name}", ns_facade / 1e3,
+               f"ns_per_task={ns_facade:.0f}")
 
 
 def run_wavefront(iters: int, em: Emitter):
@@ -222,6 +293,10 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write per-section results (µs + speedups) to "
                          "this JSON file, e.g. BENCH_pr2.json")
+    ap.add_argument("--meta", action="append", default=[], metavar="KEY=VAL",
+                    help="extra annotation recorded under meta.notes in the "
+                         "--json payload (repeatable), e.g. baselines from "
+                         "an earlier PR measured on the same host")
     args = ap.parse_args()
     em = Emitter()
     t0 = time.time()
@@ -238,12 +313,25 @@ def main() -> None:
     total = time.time() - t0
     print(f"# total {total:.1f}s")
     if args.json:
-        em.dump(args.json, meta={
+        import os
+
+        from repro.core.relic import SPIN_PAUSE_EVERY
+
+        # Host fingerprint: SPIN_PAUSE_EVERY + cpu_count + Python version
+        # determine the spin/yield regime, so BENCH files are only
+        # comparable across runs when these match.
+        meta = {
             "iters": args.iters, "only": args.only,
             "total_s": round(total, 1),
             "unix_time": int(time.time()),
             "python": sys.version.split()[0],
-        })
+            "cpu_count": os.cpu_count(),
+            "spin_pause_every": SPIN_PAUSE_EVERY,
+        }
+        for kv in args.meta:
+            key, _, val = kv.partition("=")
+            meta.setdefault("notes", {})[key] = val
+        em.dump(args.json, meta=meta)
 
 
 if __name__ == "__main__":

@@ -26,13 +26,21 @@ exist precisely because the rest of the application is serial.
 
 from __future__ import annotations
 
+import functools
 import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional, Tuple
 
 from repro.core.spsc import DEFAULT_CAPACITY, SpscRing
+
+# Task protocol: the ring carries bare ``fn, args`` pairs striped across two
+# slots (``push2``/flattened ``push_many``) — no per-task wrapper object, so
+# a submit allocates nothing beyond what the call protocol already built.
+# Keyword arguments (rare on a µs-scale hot path) are folded into ``fn`` via
+# ``functools.partial`` before the push. Both counters therefore always
+# advance by even amounts, and every drained burst has even length.
 
 
 class RelicUsageError(RuntimeError):
@@ -50,15 +58,6 @@ class RelicStats:
     parks: int = 0                   # times the assistant actually parked
     task_errors: int = 0
     last_error: Optional[BaseException] = field(default=None, repr=False)
-
-
-class _Task:
-    __slots__ = ("fn", "args", "kwargs")
-
-    def __init__(self, fn, args, kwargs):
-        self.fn = fn
-        self.args = args
-        self.kwargs = kwargs
 
 
 def _default_spin_yield() -> int:
@@ -88,7 +87,12 @@ class Relic:
     """
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = False):
-        self._ring = SpscRing(capacity)
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        # Two ring slots per task (the fn, args stripe — see the task
+        # protocol note above), so `capacity` stays a task count.
+        self._ring = SpscRing(2 * capacity)
+        self._push2 = self._ring.push2      # pre-bound: the submit hot path
         self.stats = RelicStats()
         self._completed = 0              # written by assistant only
         self._shutdown = False
@@ -124,15 +128,71 @@ class Relic:
     # ------------------------------------------------------------- public API
 
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
-        """Submit a fine-grained task (main thread only). Busy-waits if full."""
-        self._check_main("submit()")
+        """Submit a fine-grained task (main thread only). Busy-waits if full.
+
+        Allocation-free: the hot path pushes the ``fn, args`` pair the call
+        protocol already built straight into two ring slots (§VI: expressing
+        a task must be nearly free). Keyword arguments take the rare
+        ``functools.partial`` fold."""
+        if threading.get_ident() != self._main_ident:
+            self._check_main("submit()")   # slow path: classify the misuse
         if self._shutdown:
             raise RelicUsageError("submit() after shutdown")
         self.stats.submitted += 1
-        task = _Task(fn, args, kwargs)
+        if kwargs:
+            fn = functools.partial(fn, **kwargs)
+        if self._push2(fn, args):
+            return
+        self._push_spin(fn, args)
+
+    def submit_batch(
+        self, tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
+    ) -> None:
+        """Submit a burst of ``(fn, args, kwargs)`` tasks (main thread only).
+
+        One role check and one counter update cover the whole burst, which is
+        flattened into the ring's pair stripe and handed off by ``push_many``
+        — a single ``_tail`` store per sub-burst. Busy-waits (ring
+        backpressure) whenever the burst outsizes the free slots."""
+        if threading.get_ident() != self._main_ident:
+            self._check_main("submit_batch()")
+        if self._shutdown:
+            raise RelicUsageError("submit_batch() after shutdown")
+        flat: list = []
+        append = flat.append
+        for fn, args, kwargs in tasks:
+            if kwargs:
+                fn = functools.partial(fn, **kwargs)
+            append(fn)
+            append(args)
+        if not flat:
+            return
+        self.stats.submitted += len(flat) // 2
+        ring = self._ring
+        n = len(flat)
+        # Retry by advancing an offset into `flat` (push_many's `start`):
+        # a burst far larger than the ring spins here under backpressure,
+        # and slicing the remainder per sub-burst would be quadratic.
+        pos = ring.push_many(flat)
         spins = 0
-        while not self._ring.push(task):
-            # Producer-side busy wait: bounded ring is the backpressure.
+        while pos < n:
+            if spins == 0:
+                # Advisory hints must not deadlock a full-ring burst: the
+                # parked assistant is the only possible drain (§VI-B rule).
+                self._awake.set()
+            self.stats.producer_full_spins += 1
+            spins += 1
+            if spins % SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)
+            pushed = ring.push_many(flat, pos)
+            if pushed:
+                pos += pushed
+                spins = 0
+
+    def _push_spin(self, fn: Callable[..., Any], args: tuple) -> None:
+        """Full-ring slow path for submit(): bounded ring is the backpressure."""
+        spins = 0
+        while not self._push2(fn, args):
             if spins == 0:
                 # Hints are advisory (§VI-B): a full ring with a parked
                 # assistant cannot drain, so submission un-parks it. Once
@@ -183,10 +243,16 @@ class Relic:
     def _assistant_loop(self) -> None:
         ring = self._ring
         stats = self.stats
+        pop_many = ring.pop_many
         spins = 0
         while True:
-            task = ring.pop()
-            if task is None:
+            # Drain the whole burst before re-checking hints or shutdown: one
+            # _head publication per burst (pop_many), not one per task. The
+            # drain must stay unbounded — every producer publication is a
+            # whole number of fn,args pairs, so an unbounded pop keeps the
+            # stripe aligned (an odd max_items could split a pair).
+            batch = pop_many()
+            if not batch:
                 if self._shutdown:
                     return
                 if not self._awake.is_set():
@@ -201,13 +267,18 @@ class Relic:
                     time.sleep(0)  # `pause`-like: yield the GIL, stay runnable
                 continue
             spins = 0
-            try:
-                task.fn(*task.args, **task.kwargs)
-            except BaseException as e:  # surfaced at the next wait()
-                stats.task_errors += 1
-                stats.last_error = e
-            # Single atomic publication of completion (assistant-only writer).
-            self._completed += 1
+            completed = self._completed    # assistant-only writer: no race
+            for i in range(0, len(batch), 2):
+                try:
+                    batch[i](*batch[i + 1])
+                except BaseException as e:  # surfaced at the next wait()
+                    stats.task_errors += 1
+                    stats.last_error = e
+                # Atomic per-task publication of completion (store of a
+                # local, not a read-modify-write) so the producer's barrier
+                # observes progress early.
+                completed += 1
+                self._completed = completed
 
     # ------------------------------------------------------------- context mgr
 

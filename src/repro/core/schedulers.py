@@ -27,7 +27,16 @@ The observable contract (enforced by tests/test_schedulers_conformance.py):
     in-flight tasks before returning.
   * ``submit(fn, *args, **kwargs)`` enqueues a task; every substrate is
     bounded by ``capacity`` and backpressures (blocks) when full — tasks
-    are never dropped.
+    are never dropped. Burst-draining workers (relic, condvar) may hold
+    up to one drained burst (≤ ``capacity`` tasks) in flight on top of
+    the full queue, so the worst-case submitted-but-unfinished count is
+    2×``capacity``, a constant — never unbounded growth.
+  * ``submit_many(tasks)`` enqueues a burst of ``(fn, args, kwargs)``
+    tuples with the same ordering, bounding, and error semantics as the
+    equivalent ``submit()`` loop. The base class provides exactly that
+    loop as the fallback (third-party substrates inherit it for free);
+    relic/spin/condvar override it with native batch paths that pay one
+    role-check/lock/counter-publication per burst instead of per task.
   * ``wait()`` blocks until every task submitted so far has completed. If
     any task raised since the last ``wait()``, the first such exception is
     re-raised there (and cleared); the scheduler stays usable.
@@ -44,13 +53,13 @@ no-recursive-spawn rule (paper §VI-A): a task may not submit more tasks.
 from __future__ import annotations
 
 import collections
-import queue
+import functools
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import (Any, Callable, Dict, List, Optional, Protocol,
-                    runtime_checkable)
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 from repro.core.relic import SPIN_PAUSE_EVERY, Relic, RelicUsageError
 from repro.core.spsc import DEFAULT_CAPACITY
@@ -96,6 +105,8 @@ class Scheduler(Protocol):
 
     def start(self) -> "Scheduler": ...
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None: ...
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None: ...
     def wait(self) -> None: ...
     def sleep_hint(self) -> None: ...
     def wake_up_hint(self) -> None: ...
@@ -172,6 +183,14 @@ class _SchedulerBase:
     def _close_impl(self) -> None:  # pragma: no cover - trivial default
         pass
 
+    # batch submission: the SPI-wide fallback is the equivalent submit()
+    # loop, so any substrate (including third-party registrations) honours
+    # submit_many; relic/spin/condvar override with native batch paths.
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        for fn, args, kwargs in tasks:
+            self.submit(fn, *args, **kwargs)
+
     # hints: advisory, default no-op (substrates that suspend when idle
     # need no parking; spinning substrates override)
     def sleep_hint(self) -> None:
@@ -239,13 +258,26 @@ class SerialScheduler(_SchedulerBase):
 @register_scheduler("relic")
 class RelicScheduler(_SchedulerBase):
     """The paper's design (§VI): busy-wait SPSC ring, fixed producer and
-    assistant roles. Thin adapter over :class:`repro.core.relic.Relic`;
+    assistant roles. Adapter over :class:`repro.core.relic.Relic`;
     ``stats`` is the underlying ``RelicStats`` (a superset of
-    ``SchedulerStats`` counters, including spin/park telemetry)."""
+    ``SchedulerStats`` counters, including spin/park telemetry).
+
+    ``submit()`` is deliberately *not* a thin forwarder: stacking the
+    adapter's contract checks on top of ``Relic.submit``'s own (plus a
+    second ``*args``/``**kwargs`` splat) costs several hundred ns per
+    task — comparable to the ring push itself. The fast path merges both
+    layers' checks into one branch and pushes straight into the ring;
+    ``_submit_misuse`` re-runs the layered checks only to classify a
+    failure. This couples the adapter to Relic internals, which is the
+    point of the adapter being *in* the runtime package."""
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = True):
         super().__init__()
         self._relic = Relic(capacity=capacity, start_awake=start_awake)
+        # Hot-path pre-binds: one attribute load each per submit, resolved
+        # once here instead of chasing the relic -> ring chain per task.
+        self._push2 = self._relic._push2
+        self._rstats = self._relic.stats
 
     @property  # type: ignore[override]
     def stats(self):
@@ -259,13 +291,37 @@ class RelicScheduler(_SchedulerBase):
         self._relic.start()
 
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        # _closed covers relic._shutdown (close() is its only caller), and
+        # _owner equals relic's main ident (start() runs on one thread), so
+        # three loads + one get_ident() decide the whole contract.
+        if (self._closed or not self._started
+                or threading.get_ident() != self._owner):
+            self._submit_misuse("submit()")
+        self._rstats.submitted += 1
+        if kwargs:
+            fn = functools.partial(fn, **kwargs)
+        if self._push2(fn, args):
+            return
+        self._relic._push_spin(fn, args)
+
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        if not self._started:
+            raise SchedulerUsageError("submit_many() before start()")
+        if self._closed:
+            raise SchedulerUsageError("submit_many() after close()")
+        self._relic.submit_batch(tasks)
+
+    def _submit_misuse(self, what: str) -> None:
+        """Slow path: classify (and raise) the fast-path rejection."""
         if not self._started:
             # Relic itself would accept this (roles are fixed at start());
             # the uniform contract says it must raise, like every substrate.
-            raise SchedulerUsageError("submit() before start()")
+            raise SchedulerUsageError(f"{what} before start()")
         if self._closed:
-            raise SchedulerUsageError("submit() after close()")
-        self._relic.submit(fn, *args, **kwargs)
+            raise SchedulerUsageError(f"{what} after close()")
+        self._relic._check_main(what)      # wrong thread (incl. assistant)
+        raise SchedulerUsageError(f"{what} after shutdown")
 
     def wait(self) -> None:
         # Relic itself guarantees advisory hints cannot deadlock the
@@ -360,6 +416,32 @@ class SpinQueueScheduler(_SchedulerBase):
                 time.sleep(0)
         self.stats.submitted += 1
 
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        """Native batch path: each lock acquisition moves as many tasks as
+        the bounded deque has room for, instead of one."""
+        self._check_submit("submit_many()")
+        if not isinstance(tasks, (list, tuple)):
+            tasks = list(tasks)
+        n = len(tasks)
+        pos = 0
+        spins = 0
+        while pos < n:
+            with self._lock:
+                free = self._capacity - len(self._dq)
+                if free > 0:
+                    take = min(free, n - pos)
+                    self._dq.extend(tasks[pos:pos + take])
+                    pos += take
+                    self.stats.submitted += take
+                    spins = 0
+                    continue
+            if spins == 0:
+                self._awake.set()     # same advisory-hint rule as submit()
+            spins += 1
+            if spins % SPIN_PAUSE_EVERY == 0:
+                time.sleep(0)
+
     def wait(self) -> None:
         if self._completed < self.stats.submitted:
             # Advisory hints must not deadlock the barrier: un-park the
@@ -390,16 +472,21 @@ class SpinQueueScheduler(_SchedulerBase):
 
 @register_scheduler("condvar")
 class CondvarQueueScheduler(_SchedulerBase):
-    """Persistent worker over a bounded ``queue.Queue`` (condition-variable
-    suspension on both sides — the GNU-OpenMP flavour: suspension-based
-    waits). Promoted from the benchmark-private ``_CondvarWorker`` and
-    hardened: bounded queue, exception capture, idempotent shutdown."""
+    """Persistent worker over a bounded condvar-guarded deque (suspension on
+    both sides — the GNU-OpenMP flavour: suspension-based waits). Promoted
+    from the benchmark-private ``_CondvarWorker`` and hardened: bounded
+    queue, exception capture, idempotent shutdown. The deque+Condition pair
+    replaced ``queue.Queue`` so the native ``submit_many`` path can move a
+    whole burst per lock acquisition (and the worker can drain one), which
+    a ``Queue`` cannot express."""
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY):
         super().__init__()
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
-        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._capacity = capacity
+        self._dq: collections.deque = collections.deque()
+        self._cv = threading.Condition()
         self._done = threading.Semaphore(0)
         self._outstanding = 0
         self._t: Optional[threading.Thread] = None
@@ -411,23 +498,60 @@ class CondvarQueueScheduler(_SchedulerBase):
 
     def _loop(self) -> None:
         while True:
-            item = self._q.get()
-            if item is None:
-                return
-            fn, args, kwargs = item
-            try:
-                fn(*args, **kwargs)
-            except BaseException as e:
-                self._record_error(e)
-            finally:
-                self.stats.completed += 1
-                self._done.release()
+            with self._cv:
+                while not self._dq:
+                    self._cv.wait()
+                # Drain the full burst under one lock acquisition; the None
+                # shutdown sentinel is FIFO-last so it ends the final batch.
+                batch = list(self._dq)
+                self._dq.clear()
+                self._cv.notify()         # free a producer blocked on full
+            for item in batch:
+                if item is None:
+                    return
+                fn, args, kwargs = item
+                try:
+                    fn(*args, **kwargs)
+                except BaseException as e:
+                    self._record_error(e)
+                finally:
+                    self.stats.completed += 1
+                    self._done.release()
+
+    def _put(self, item: Any) -> None:
+        with self._cv:
+            while len(self._dq) >= self._capacity:
+                self._cv.wait()           # blocks when full: backpressure
+            self._dq.append(item)
+            self._cv.notify()
 
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
         self._check_submit()
-        self._q.put((fn, args, kwargs))   # blocks when full: backpressure
+        self._put((fn, args, kwargs))
         self.stats.submitted += 1
         self._outstanding += 1
+
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        """Native batch path: each wakeup hands the worker every task the
+        bounded queue has room for, one notify per sub-burst."""
+        self._check_submit("submit_many()")
+        if not isinstance(tasks, (list, tuple)):
+            tasks = list(tasks)
+        n = len(tasks)
+        pos = 0
+        with self._cv:
+            while pos < n:
+                free = self._capacity - len(self._dq)
+                if free <= 0:
+                    self._cv.wait()
+                    continue
+                take = min(free, n - pos)
+                self._dq.extend(tasks[pos:pos + take])
+                pos += take
+                self.stats.submitted += take
+                self._outstanding += take
+                self._cv.notify()
 
     def wait(self) -> None:
         for _ in range(self._outstanding):
@@ -437,7 +561,7 @@ class CondvarQueueScheduler(_SchedulerBase):
 
     def _close_impl(self) -> None:
         if self._t is not None:
-            self._q.put(None)             # drains FIFO: sentinel is last
+            self._put(None)               # drains FIFO: sentinel is last
             self._t.join(timeout=5)
             self._t = None
 

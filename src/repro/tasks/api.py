@@ -81,24 +81,55 @@ class TaskHandle:
     barrier. A handle whose task failed re-raises that task's exception;
     the scope-level aggregate still fires at the next barrier regardless
     of which handles were inspected.
+
+    Allocation-slim by design: completion is a plain flag write, and the
+    ``threading.Event`` (a Condition + Lock allocation, the dominant cost
+    of the PR 2 handle) is created lazily on the first *blocking* wait.
+    The common fire-and-barrier pattern — submit, ``barrier()``, then read
+    results — never allocates one.
     """
 
-    __slots__ = ("label", "_event", "_result", "_error")
+    __slots__ = ("label", "_done", "_event", "_result", "_error")
+
+    # Shared creation lock for the lazy event: taken only on the slow
+    # (blocking-wait) path, so it costs the hot path nothing.
+    _event_init_lock = threading.Lock()
 
     def __init__(self, label: Optional[str] = None):
         self.label = label
-        self._event = threading.Event()
+        self._done = False
+        self._event: Optional[threading.Event] = None
         self._result: Any = None
         self._error: Optional[BaseException] = None
 
     def done(self) -> bool:
         """True once the task has finished (successfully or not)."""
-        return self._event.is_set()
+        return self._done
+
+    def _wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until finished (lazily materializing the event); returns
+        False only on timeout."""
+        if self._done:
+            return True
+        ev = self._event
+        if ev is None:
+            with TaskHandle._event_init_lock:
+                ev = self._event
+                if ev is None:
+                    ev = threading.Event()
+                    self._event = ev
+            if self._done:
+                # The finisher may have completed between the flag check
+                # and the event install, missing the fresh event: make the
+                # event agree with the flag so later waiters pass too.
+                ev.set()
+                return True
+        return ev.wait(timeout)
 
     def result(self, timeout: Optional[float] = None) -> Any:
         """Block until completion; return the value or re-raise the task's
         exception. ``timeout`` (seconds) raises ``TimeoutError``."""
-        if not self._event.wait(timeout):
+        if not self._wait(timeout):
             raise TimeoutError(f"task {self.label!r} still pending")
         if self._error is not None:
             raise self._error
@@ -106,23 +137,27 @@ class TaskHandle:
 
     def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
         """Block until completion; return the exception (or None)."""
-        if not self._event.wait(timeout):
+        if not self._wait(timeout):
             raise TimeoutError(f"task {self.label!r} still pending")
         return self._error
 
     def __repr__(self) -> str:
         state = ("error" if self._error is not None else
-                 "done" if self._event.is_set() else "pending")
+                 "done" if self._done else "pending")
         return f"TaskHandle({self.label!r}, {state})"
 
     # -- internal (written by the thread that runs the task) ---------------
     def _finish(self, result: Any, error: Optional[BaseException]) -> None:
         self._result = result
         self._error = error
-        self._event.set()
+        self._done = True        # the flag is the completion publication
+        ev = self._event
+        if ev is not None:       # only waiters pay for event signalling
+            ev.set()
 
     def _reset(self) -> None:
-        self._event.clear()
+        self._done = False
+        self._event = None
         self._result = None
         self._error = None
 
@@ -176,6 +211,10 @@ class TaskScope:
             except USAGE_ERRORS:
                 self._owns = False          # borrowed: already running
         self.substrate: str = getattr(self._sched, "name", type(self._sched).__name__)
+        # Feature-detect the batch SPI once: registry substrates all have it
+        # (natively or via the base-class fallback), but a borrowed
+        # third-party Scheduler may predate submit_many.
+        self._submit_many = getattr(self._sched, "submit_many", None)
         self._errors: List[BaseException] = []
         self._err_lock = threading.Lock()
         self._closed = False
@@ -209,6 +248,18 @@ class TaskScope:
         if self._closed:
             raise SchedulerUsageError("submit() on a closed TaskScope")
         self._sched.submit(self._run_into, handle, fn, args, kwargs)
+
+    def _submit_raw_many(self, tasks: List[tuple]) -> None:
+        """Push pre-packed ``(fn, args, kwargs)`` tasks through the batch
+        SPI (worksharing constructs own their error capture and join, so
+        no handles and no per-task wrapper are involved)."""
+        if self._closed:
+            raise SchedulerUsageError("submit on a closed TaskScope")
+        if self._submit_many is not None:
+            self._submit_many(tasks)
+        else:  # borrowed pre-submit_many substrate: equivalent loop
+            for fn, args, kwargs in tasks:
+                self._sched.submit(fn, *args, **kwargs)
 
     def _run_into(self, handle: TaskHandle, fn: Callable[..., Any],
                   args: tuple, kwargs: dict) -> None:
@@ -263,12 +314,12 @@ class TaskScope:
         Errors from unrelated scope tasks stay queued for ``barrier()`` —
         this is how worksharing constructs avoid misattributing a failed
         sibling to the loop."""
-        if not all(h._event.is_set() for h in handles):
+        if not all(h._done for h in handles):
             # Advisory hints must never deadlock a join (same rule as the
             # SPI's wait()): un-park a sleeping worker before blocking.
             self._sched.wake_up_hint()
         for h in handles:
-            h._event.wait()
+            h._wait()
         errs = [h._error for h in handles if h._error is not None]
         if not errs:
             return
@@ -313,6 +364,44 @@ class TaskScope:
 
 # ------------------------------------------------------------- worksharing
 
+class _ChunkJoin:
+    """Single countdown latch shared by every chunk of one worksharing loop
+    (the worksharing-task join of Maroñas et al., 2020): one allocation per
+    *loop* instead of one ``TaskHandle`` + ``Event`` per chunk. Chunk errors
+    collect here, in completion order, and never enter the scope aggregate —
+    the loop raises its own errors and a sibling's never misattribute."""
+
+    __slots__ = ("_remaining", "_lock", "_event", "errors")
+
+    def __init__(self, count: int):
+        self._remaining = count
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self.errors: List[BaseException] = []
+
+    def finish(self, error: Optional[BaseException] = None) -> None:
+        with self._lock:
+            if error is not None:
+                self.errors.append(error)
+            self._remaining -= 1
+            done = self._remaining <= 0
+        if done:
+            self._event.set()
+
+    def pending(self) -> bool:
+        return self._remaining > 0
+
+    def wait(self) -> None:
+        self._event.wait()
+
+    def raise_errors(self) -> None:
+        errs = self.errors
+        if len(errs) == 1:
+            raise errs[0]
+        if errs:
+            raise TaskGroupError(errs)
+
+
 def _chunk_ranges(n: int, grain: int) -> List[Tuple[int, int]]:
     return [(lo, min(lo + grain, n)) for lo in range(0, n, grain)]
 
@@ -333,34 +422,46 @@ def parallel_for(scope: TaskScope, n: int, body: Callable[[int], Any],
     """Worksharing loop: run ``body(i)`` for ``i in range(n)`` over the
     scope's substrate, chunked by ``grain`` indices per task.
 
-    All chunks but the last are submitted; the calling thread runs the
-    final chunk itself (producer-participates, paper §VI), then joins the
-    loop's own chunks — on return every index has run, and body
-    exceptions (only the loop's, never an unrelated sibling task's) are
-    raised under the scope's aggregation rules. With ``n <= grain`` the
-    whole loop runs inline on the caller (zero submissions); ``n == 0``
-    is a pure no-op.
+    All chunks but the last go down in one ``submit_many`` burst; the
+    calling thread runs the final chunk itself (producer-participates,
+    paper §VI), then joins the loop on a single shared countdown latch —
+    on return every index has run, and body exceptions (only the loop's,
+    never an unrelated sibling task's) are raised under the scope's
+    aggregation rules. With ``n <= grain`` the whole loop runs inline on
+    the caller (zero submissions, zero allocations); ``n == 0`` is a pure
+    no-op.
     """
     if n < 0:
         raise ValueError(f"n must be non-negative, got {n}")
     if n == 0:
         return
     ranges = _chunk_ranges(n, _resolve_grain(n, grain))
+    if len(ranges) == 1:
+        if scope._closed:
+            raise SchedulerUsageError("parallel_for() on a closed TaskScope")
+        for i in range(n):
+            body(i)
+        return
+
+    join = _ChunkJoin(len(ranges))
 
     def run_chunk(lo: int, hi: int) -> None:
-        for i in range(lo, hi):
-            body(i)
+        try:
+            for i in range(lo, hi):
+                body(i)
+        except BaseException as e:
+            join.finish(e)
+        else:
+            join.finish()
 
-    handles = []
-    for lo, hi in ranges[:-1]:
-        h = TaskHandle(label=f"parallel_for[{lo}:{hi}]")
-        scope._submit_into(h, run_chunk, (lo, hi), {})
-        handles.append(h)
-    lo, hi = ranges[-1]
-    h = TaskHandle(label=f"parallel_for[{lo}:{hi}]")
-    scope._run_into(h, run_chunk, (lo, hi), {})
-    handles.append(h)
-    scope._wait_handles(handles)
+    scope._submit_raw_many([(run_chunk, (lo, hi), {})
+                            for lo, hi in ranges[:-1]])
+    run_chunk(*ranges[-1])
+    if join.pending():
+        # Advisory hints must never deadlock a join (the SPI wait() rule).
+        scope._sched.wake_up_hint()
+    join.wait()
+    join.raise_errors()
 
 
 _MISSING = object()
@@ -382,24 +483,29 @@ def map_reduce(scope: TaskScope, n: int, map_fn: Callable[[int], Any],
         return init
     ranges = _chunk_ranges(n, _resolve_grain(n, grain))
     partials: List[Any] = [None] * len(ranges)  # one slot per chunk: no lock
+    join = _ChunkJoin(len(ranges))
 
     def run_chunk(ci: int, lo: int, hi: int) -> None:
-        acc = map_fn(lo)
-        for i in range(lo + 1, hi):
-            acc = reduce_fn(acc, map_fn(i))
-        partials[ci] = acc
+        try:
+            acc = map_fn(lo)
+            for i in range(lo + 1, hi):
+                acc = reduce_fn(acc, map_fn(i))
+            partials[ci] = acc
+        except BaseException as e:
+            join.finish(e)
+        else:
+            join.finish()
 
-    handles = []
-    for ci, (lo, hi) in enumerate(ranges[:-1]):
-        h = TaskHandle(label=f"map_reduce[{lo}:{hi}]")
-        scope._submit_into(h, run_chunk, (ci, lo, hi), {})
-        handles.append(h)
-    ci = len(ranges) - 1
-    lo, hi = ranges[-1]
-    h = TaskHandle(label=f"map_reduce[{lo}:{hi}]")
-    scope._run_into(h, run_chunk, (ci, lo, hi), {})
-    handles.append(h)
-    scope._wait_handles(handles)
+    if len(ranges) > 1:
+        scope._submit_raw_many([(run_chunk, (ci, lo, hi), {})
+                                for ci, (lo, hi) in enumerate(ranges[:-1])])
+    elif scope._closed:
+        raise SchedulerUsageError("map_reduce() on a closed TaskScope")
+    run_chunk(len(ranges) - 1, *ranges[-1])
+    if join.pending():
+        scope._sched.wake_up_hint()   # never let an advisory hint deadlock
+    join.wait()
+    join.raise_errors()
     acc = init
     for p in partials:
         acc = p if acc is _MISSING else reduce_fn(acc, p)
@@ -441,8 +547,10 @@ class TaskGraph:
     ``run()`` accepts a :class:`TaskScope` (reused, left open), a registry
     name, or a ``Scheduler`` instance (a scope is created around it for
     the duration). Within a wavefront, all tasks but one are submitted and
-    the calling thread runs the last itself; the scope barrier separates
-    wavefronts. On failure the aggregate error propagates and every
+    the calling thread runs the last itself; wavefronts are separated by
+    joining exactly that wavefront's handles (never a full scope barrier,
+    so a borrowed scope's unrelated sibling errors are not misattributed
+    to the graph). On failure the aggregate error propagates and every
     never-run task's handle completes with :class:`TaskCancelledError`.
     A graph may be ``run()`` repeatedly (handles are reset per run); runs
     are not reentrant.
@@ -511,7 +619,12 @@ class TaskGraph:
                 last = wave[-1]
                 args = tuple(self._nodes[d].handle.result() for d in last.deps)
                 scope._run_into(last.handle, last.fn, args, {})
-                scope.barrier()
+                # Join only this wavefront's own handles (not a full scope
+                # barrier): on a borrowed long-lived scope, a barrier would
+                # raise — and clear — errors from unrelated sibling tasks,
+                # misattributing them to the graph (the same fix
+                # parallel_for has).
+                scope._wait_handles([node.handle for node in wave])
                 for node in wave:
                     done.add(node.name)
                     del remaining[node.name]

@@ -123,6 +123,147 @@ def test_spsc_property_any_interleaving_is_fifo(data, capacity):
         assert ring.full() == (len(model) == capacity)
 
 
+@given(st.data(), st.integers(min_value=1, max_value=8))
+@settings(deadline=None, max_examples=30)
+def test_spsc_property_batched_ops_match_fifo(data, capacity):
+    """Model-based check for the batch paths: under ANY single-threaded
+    interleaving of push/pop/push_many/pop_many (chosen by hypothesis), the
+    ring agrees with an ideal FIFO — push_many accepts exactly the free
+    slots, pop_many returns exactly the available items (up to its cap),
+    and the cached head/tail snapshots never change observable behaviour."""
+    ring = SpscRing(capacity)
+    model: list = []
+    next_item = 0
+    for _ in range(data.draw(st.integers(10, 150))):
+        op = data.draw(st.sampled_from(
+            ["push", "pop", "push_many", "pop_many"]))
+        if op == "push":
+            pushed = ring.push(next_item)
+            assert pushed == (len(model) < capacity)
+            if pushed:
+                model.append(next_item)
+                next_item += 1
+        elif op == "pop":
+            got = ring.pop()
+            assert got == (model.pop(0) if model else None)
+        elif op == "push_many":
+            k = data.draw(st.integers(0, capacity + 2))
+            items = list(range(next_item, next_item + k))
+            pushed = ring.push_many(items)
+            assert pushed == min(k, capacity - len(model))
+            model.extend(items[:pushed])
+            next_item += pushed
+        else:
+            cap = data.draw(st.one_of(st.none(),
+                                      st.integers(0, capacity + 2)))
+            got = ring.pop_many(cap)
+            want_n = len(model) if cap is None else min(cap, len(model))
+            assert got == model[:want_n]
+            del model[:want_n]
+        assert len(ring) == len(model)
+        assert ring.empty() == (not model)
+        assert ring.full() == (len(model) == capacity)
+
+
+@given(st.lists(st.integers(1, 7), min_size=1, max_size=60),
+       st.integers(min_value=1, max_value=8))
+@settings(deadline=None, max_examples=30)
+def test_spsc_property_push_many_pop_many_roundtrip(chunks, capacity):
+    """Feeding arbitrary chunk sizes through push_many while pop_many drains
+    opportunistically preserves FIFO with no loss or duplication, across
+    many wraparounds (the cached snapshots go stale and refresh)."""
+    ring = SpscRing(capacity)
+    sent = 0
+    out = []
+    for k in chunks:
+        items = list(range(sent, sent + k))
+        pos = 0
+        while pos < k:
+            pos += ring.push_many(items, pos)   # offset retry: no tail copy
+            if pos < k:          # full: drain a burst, then keep pushing
+                out.extend(ring.pop_many())
+        sent += k
+    out.extend(ring.pop_many())
+    assert out == list(range(sent))
+    assert ring.empty()
+
+
+@pytest.mark.parametrize("capacity", [1, 2, 7])
+def test_spsc_concurrent_batched_1p1c_fifo_no_loss(capacity):
+    """push_many producer + pop_many consumer interleaving across threads:
+    FIFO order preserved, nothing lost or duplicated, even at capacity 1
+    (where every batch degenerates to single-slot hand-offs)."""
+    ring = SpscRing(capacity)
+    n = 20_000
+    out = []
+    stop = threading.Event()
+
+    def consumer():
+        while len(out) < n and not stop.is_set():
+            got = ring.pop_many()
+            if got:
+                out.extend(got)
+            else:
+                time.sleep(0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    try:
+        i = 0
+        while i < n:
+            batch = list(range(i, min(i + 13, n)))
+            pos = 0
+            while pos < len(batch):
+                pushed = ring.push_many(batch[pos:])
+                if pushed:
+                    pos += pushed
+                else:
+                    time.sleep(0)
+            i += len(batch)
+        t.join(30)
+    finally:
+        stop.set()
+        t.join(5)
+    assert out == list(range(n))
+
+
+def test_spsc_push_many_accepts_tuple_and_empty():
+    ring = SpscRing(4)
+    assert ring.push_many(()) == 0
+    assert ring.push_many((10, 11)) == 2
+    assert ring.pop_many(1) == [10]
+    assert ring.pop_many() == [11]
+    assert ring.pop_many() == []
+
+
+def test_spsc_push_many_start_offset():
+    """The `start` offset pushes items[start:] without the caller slicing
+    (the backpressure retry path for bursts larger than the ring)."""
+    ring = SpscRing(3)
+    items = [0, 1, 2, 3, 4]
+    assert ring.push_many(items) == 3
+    assert ring.push_many(items, 3) == 0          # full: nothing, no copy
+    assert ring.pop_many(2) == [0, 1]
+    assert ring.push_many(items, 3) == 2
+    assert ring.pop_many() == [2, 3, 4]
+    assert ring.push_many(items, 5) == 0          # exhausted offset: no-op
+    assert ring.push_many(items, 7) == 0          # overshot offset: no rewind
+    assert len(ring) == 0 and ring.empty()
+
+
+def test_spsc_pop_many_nonpositive_budget_is_a_noop():
+    """A zero/negative max_items must not rewind _head (regression: a
+    negative budget used to move the head backwards, resurrecting cleared
+    slots and re-delivering items)."""
+    ring = SpscRing(4)
+    assert ring.push_many((1, 2)) == 2
+    assert ring.pop_many(0) == []
+    assert ring.pop_many(-1) == []
+    assert len(ring) == 2
+    assert ring.pop_many() == [1, 2]
+    assert ring.pop_many(-5) == [] and ring.empty()
+
+
 def test_spsc_full_empty():
     ring = SpscRing(2)
     assert ring.pop() is None
@@ -226,6 +367,55 @@ def test_relic_sleep_hint_parks_assistant():
     rt.wait()
     assert out == [1]
     rt.shutdown()
+
+
+def test_relic_submit_batch_runs_in_order_and_mixes_with_submit():
+    out = []
+    with Relic(start_awake=True) as rt:
+        rt.submit(out.append, 0)
+        rt.submit_batch([(out.append, (i,), {}) for i in range(1, 400)])
+        rt.submit(out.append, 400)
+        rt.wait()
+    assert out == list(range(401))
+    assert rt.stats.submitted == rt.stats.completed == 401
+
+
+def test_relic_submit_batch_backpressures_past_capacity():
+    """A burst several times the ring capacity must block-and-drain, not
+    drop: the producer busy-waits on free slots (paper §VI-A bounded ring)."""
+    out = []
+    with Relic(capacity=4, start_awake=True) as rt:
+        rt.submit_batch(
+            [(lambda i=i: (time.sleep(0.0002), out.append(i)), (), {})
+             for i in range(100)])
+        rt.wait()
+    assert out == list(range(100))
+    assert rt.stats.producer_full_spins > 0
+
+
+def test_relic_submit_batch_rejected_from_assistant():
+    """Paper §VI-A: no recursive spawn — the batch entry point included."""
+    errs = []
+    with Relic(start_awake=True) as rt:
+        def recursive():
+            try:
+                rt.submit_batch([(lambda: None, (), {})])
+            except RelicUsageError as e:
+                errs.append(e)
+
+        rt.submit(recursive)
+        rt.wait()
+    assert len(errs) == 1
+
+
+def test_relic_submit_batch_unparks_a_sleeping_assistant():
+    """Advisory hints must not deadlock a full-ring burst (§VI-B rule)."""
+    out = []
+    with Relic(capacity=2) as rt:     # starts parked (start_awake=False)
+        time.sleep(0.02)
+        rt.submit_batch([(out.append, (i,), {}) for i in range(20)])
+        rt.wait()
+    assert out == list(range(20))
 
 
 def test_relic_backpressure_capacity():

@@ -130,6 +130,119 @@ def test_misuse_raises(name):
 
 
 @pytest.mark.parametrize("name", ALL)
+def test_submit_with_kwargs(name):
+    """Keyword arguments reach the task on every substrate (relic folds
+    them into a partial before the ring push — the rare path)."""
+    out = []
+
+    def record(a, b=0, c=0):
+        out.append((a, b, c))
+
+    with make_scheduler(name) as sched:
+        sched.submit(record, 1, b=2, c=3)
+        sched.submit_many([(record, (4,), {"b": 5}), (record, (6,), {})])
+        sched.wait()
+    assert sorted(out) == [(1, 2, 3), (4, 5, 0), (6, 0, 0)]
+
+
+# ------------------------------------------------------- batch SPI contract
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_completes_everything(name):
+    """submit_many == the equivalent submit() loop: completion + counters."""
+    done = []
+    with make_scheduler(name) as sched:
+        sched.submit_many([(done.append, (i,), {}) for i in range(100)])
+        sched.wait()
+        assert sorted(done) == list(range(100))
+        assert sched.stats.submitted == 100
+        assert sched.stats.completed == 100
+        assert sched.stats.task_errors == 0
+
+
+@pytest.mark.parametrize("name", SINGLE_CONSUMER)
+def test_submit_many_preserves_fifo_and_interleaves_with_submit(name):
+    out = []
+    with make_scheduler(name) as sched:
+        sched.submit(out.append, 0)
+        sched.submit_many([(out.append, (i,), {}) for i in range(1, 400)])
+        sched.submit(out.append, 400)
+        sched.wait()
+    assert out == list(range(401))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_accepts_generators_and_empty_bursts(name):
+    done = []
+    with make_scheduler(name) as sched:
+        sched.submit_many(())                       # empty burst: no-op
+        sched.submit_many((done.append, (i,), {}) for i in range(10))
+        sched.wait()
+    assert sorted(done) == list(range(10))
+    assert sched.stats.submitted == 10
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_bounded_backpressure_never_drops(name):
+    """A burst far past capacity must block on free slots, never drop."""
+    done = []
+    with make_scheduler(name, capacity=4) as sched:
+        sched.submit_many(
+            [(lambda i=i: (time.sleep(0.0002), done.append(i)), (), {})
+             for i in range(200)])
+        sched.wait()
+    assert sorted(done) == list(range(200))
+    assert sched.stats.completed == 200
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_errors_surface_at_wait(name):
+    with make_scheduler(name) as sched:
+        sched.submit_many([(lambda: 1 / 0, (), {}),
+                           (lambda: None, (), {})])
+        with pytest.raises(ZeroDivisionError):
+            sched.wait()
+        assert sched.stats.task_errors == 1
+        sched.submit_many([(lambda: None, (), {})])   # still usable
+        sched.wait()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_misuse_raises(name):
+    sched = make_scheduler(name)
+    with pytest.raises(USAGE_ERRORS):
+        sched.submit_many([(lambda: None, (), {})])   # before start
+    sched.start()
+    err = []
+
+    def foreign():
+        try:
+            sched.submit_many([(lambda: None, (), {})])
+        except USAGE_ERRORS as e:
+            err.append(e)
+
+    t = threading.Thread(target=foreign)
+    t.start()
+    t.join()
+    assert err                                        # owning-thread-only
+    sched.close()
+    with pytest.raises(USAGE_ERRORS):
+        sched.submit_many([(lambda: None, (), {})])   # after close
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_submit_many_with_parked_worker_makes_progress(name):
+    """Advisory hints must not deadlock a batch that outsizes capacity."""
+    done = []
+    with make_scheduler(name, capacity=2) as sched:
+        sched.sleep_hint()
+        time.sleep(0.02)
+        sched.submit_many([(done.append, (i,), {}) for i in range(20)])
+        sched.wait()
+    assert sorted(done) == list(range(20))
+
+
+@pytest.mark.parametrize("name", ALL)
 def test_wait_with_nothing_outstanding_returns(name):
     with make_scheduler(name) as sched:
         sched.wait()

@@ -386,6 +386,34 @@ def test_taskgraph_rejects_foreign_handles():
 
 
 @pytest.mark.parametrize("name", ALL)
+def test_taskgraph_does_not_adopt_sibling_errors_on_borrowed_scope(name):
+    """A failed sibling task on a long-lived scope must not be raised (and
+    cleared) by the graph's wavefront joins — the graph completes cleanly
+    and the sibling's error still fires at the scope barrier (the same
+    misattribution fix parallel_for has)."""
+    with TaskScope(name) as scope:
+        scope.submit(lambda: 1 / 0)              # unrelated flaky sibling
+        g = TaskGraph()
+        g.task("x", lambda: 1)
+        g.task("y", lambda x: x + 1, deps=("x",))
+        assert g.run(scope) == {"x": 1, "y": 2}  # must NOT raise
+        with pytest.raises(ZeroDivisionError):
+            scope.barrier()                      # sibling error kept for here
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_taskgraph_own_errors_do_not_rearm_the_barrier(name):
+    """Errors raised by the graph run are consumed: the next barrier on the
+    same scope does not raise them again."""
+    g = TaskGraph()
+    g.task("boom", lambda: 1 / 0)
+    with TaskScope(name) as scope:
+        with pytest.raises(ZeroDivisionError):
+            g.run(scope)
+        scope.barrier()                          # nothing left to raise
+
+
+@pytest.mark.parametrize("name", ALL)
 def test_run_wavefronts_requires_started_scheduler(name):
     from repro.tasks.graph import run_wavefronts
 
@@ -395,6 +423,65 @@ def test_run_wavefronts_requires_started_scheduler(name):
 
 def test_taskgraph_empty_run_returns_empty():
     assert TaskGraph().run("serial") == {}
+
+
+# ----------------------------------------------------- allocation-slim paths
+
+@pytest.mark.parametrize("name", ALL)
+def test_handle_event_is_lazy(name):
+    """Completion is a plain flag write: a handle that is only inspected
+    after the barrier never allocates its Event; a blocking result() on a
+    pending handle materializes one."""
+    with TaskScope(name) as scope:
+        h = scope.submit(lambda: 7)
+        scope.barrier()
+        assert h.done() and h._event is None     # fire-and-barrier: no Event
+        assert h.result() == 7 and h.exception() is None
+        assert h._event is None                  # done fast path stays lazy
+        slow = scope.submit(lambda: (time.sleep(0.02), "s")[1])
+        assert slow.result(timeout=5) == "s"     # blocking wait path
+    assert "done" in repr(h)
+
+
+def test_handle_timeout_still_raises():
+    with TaskScope("relic") as scope:
+        h = scope.submit(time.sleep, 0.2)
+        with pytest.raises(TimeoutError):
+            h.result(timeout=0.01)
+        assert h.result(timeout=5) is None       # and then completes
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_handle_waitable_from_another_thread(name):
+    """The lazy event must be shared across concurrent waiters: a foreign
+    reader thread and the owner both block on the same pending handle."""
+    got = []
+    with TaskScope(name) as scope:
+        h = scope.submit(lambda: (time.sleep(0.05), 42)[1])
+        t = threading.Thread(target=lambda: got.append(h.result(timeout=5)))
+        t.start()
+        assert h.result(timeout=5) == 42
+        t.join(5)
+    assert got == [42]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_parallel_for_single_chunk_raises_body_error_directly(name):
+    """The zero-submission inline path still reports body errors."""
+    with TaskScope(name) as scope:
+        with pytest.raises(ValueError, match="inline boom"):
+            parallel_for(scope, 3, lambda i: (_ for _ in ()).throw(
+                ValueError("inline boom")), grain=100)
+        scope.barrier()                          # consumed: not re-raised
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_map_reduce_chunk_error_propagates(name):
+    with TaskScope(name) as scope:
+        with pytest.raises(ZeroDivisionError):
+            map_reduce(scope, 12, lambda i: 1 // (i - 5),
+                       lambda a, b: a + b, grain=3)
+        scope.barrier()                          # consumed: not re-raised
 
 
 # ------------------------------------------------- producer-participates mix
