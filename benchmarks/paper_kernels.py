@@ -1,52 +1,57 @@
-"""The paper's benchmark kernels as paired task instances (§IV).
+"""DEPRECATED shim: the paper kernels now live in :mod:`repro.workloads`.
 
-Each entry yields (task_a, task_b, fused): two independent jitted instances
-operating on their own copies of the input (the paper generates two identical
-graphs / two buffer copies), plus a fused single-call variant.
+``build_tasks()`` is kept for back-compat and returns the same
+``{name: (task_a, task_b, fused)}`` mapping, now built from the workload
+registry. Unlike the pre-workloads version, every thunk **blocks until the
+result is ready** (``jax.block_until_ready`` inside the closure), so
+timing a task measures compute — the old ``_pair`` returned bare jitted
+partials whose paired-task timings measured async dispatch instead.
+New code should use ``repro.workloads.make_workload`` directly (raw
+non-blocking dispatch closures are available there as ``.dispatches``).
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Callable, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.tasks import graph, jsonparse
+from repro.workloads import PAPER_WORKLOADS, make_workload
 
 TaskTriple = Tuple[Callable, Callable, Callable]
 
 
-def _pair(fn, x1, x2) -> TaskTriple:
-    f = jax.jit(fn)
-    stacked = jnp.stack([x1, x2])
-    vf = jax.jit(lambda xs: jax.vmap(fn)(xs))
-    # warm the caches
-    f(x1).block_until_ready()
-    f(x2).block_until_ready()
-    vf(stacked).block_until_ready()
-    return (functools.partial(f, x1), functools.partial(f, x2),
-            functools.partial(vf, stacked))
+def _json_scalar(task):
+    """Preserve the historical json task shape: one scalar jax.Array
+    (``structural.sum() + depth[-1] + ok``), not the workload's raw
+    ``(structural, depth, ok)`` tuple. Works for the fused (batched)
+    variant too via the trailing axis."""
+
+    def wrapped():
+        structural, depth, ok = task()
+        return jax.block_until_ready(
+            structural.sum(axis=-1) + depth[..., -1] + ok)
+
+    wrapped.__name__ = getattr(task, "__name__", "json-task")
+    return wrapped
 
 
 def build_tasks() -> Dict[str, TaskTriple]:
-    adj, w = graph.kronecker_graph()
-    adj2, w2 = jnp.array(adj), jnp.array(w)  # the second identical instance
-    buf = jsonparse.to_bytes(jsonparse.WIDGET_JSON)
-    buf2 = jnp.array(buf)
-
-    def json_task(b):
-        s, depth, ok = jsonparse.parse_structural(b)
-        return s.sum() + depth[-1] + ok
-
-    tasks = {
-        "bc": _pair(lambda a: graph.betweenness_centrality(a, 0), adj, adj2),
-        "bfs": _pair(lambda a: graph.bfs(a, 0), adj, adj2),
-        "cc": _pair(graph.connected_components, adj, adj2),
-        "pr": _pair(graph.pagerank, adj, adj2),
-        "sssp": _pair(lambda x: graph.sssp(x, 0), w, w2),
-        "tc": _pair(graph.triangle_count, adj, adj2),
-        "json": _pair(json_task, buf, buf2),
-    }
-    return tasks
+    warnings.warn(
+        "benchmarks.paper_kernels is deprecated: use repro.workloads "
+        "(make_workload(name).tasks / .fused_task())",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    out: Dict[str, TaskTriple] = {}
+    for name in PAPER_WORKLOADS:
+        w = make_workload(name)
+        task_a, task_b = w.tasks[0], w.tasks[1]
+        fused = w.fused_task()
+        if name == "json":
+            task_a, task_b, fused = (_json_scalar(task_a),
+                                     _json_scalar(task_b),
+                                     _json_scalar(fused))
+        out[name] = (task_a, task_b, fused)
+    return out

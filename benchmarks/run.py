@@ -15,14 +15,23 @@
   grain — parallel_for grain-size sweep per substrate (grain is the
           paper's central variable: tasks-per-chunk vs scheduling
           overhead on a fixed GIL-releasing µs-scale body)
+  paper — the headline table (paper §IV/§VII): speedup-over-serial for
+          every ``repro.workloads`` workload × execution variant
+          (paired, chunked) × substrate, each cell oracle-checked
+          before it is timed
   roofline — summary of the dry-run artifacts, if present
 
 Output: ``name,us_per_call,derived`` CSV per line on stdout (unchanged
 format); ``--json PATH`` additionally writes the same rows, grouped per
 section with run metadata, to a machine-readable JSON file (convention:
 ``BENCH_<tag>.json``) so the perf trajectory is recorded across PRs.
+``--compare BENCH_old.json`` flags every row more than ``--compare-tol``
+slower than the same-named row of an earlier file and exits non-zero —
+the measured-trajectory gate (also non-zero when the baseline shares no
+rows with the run: a vacuous gate fails loudly). Compare like-for-like:
+same sections, same host fingerprint.
 Usage: PYTHONPATH=src python -m benchmarks.run [--iters 1000]
-       [--only fig1] [--json BENCH_pr2.json]
+       [--only paper] [--json BENCH_new.json] [--compare BENCH_pr4.json]
 """
 
 from __future__ import annotations
@@ -66,13 +75,17 @@ class Emitter:
 
 
 def run_figures(iters: int, em: Emitter):
-    from benchmarks.paper_kernels import build_tasks
     from benchmarks.schedulers import bench_strategies
+    from repro.workloads import PAPER_WORKLOADS, make_workload
 
-    tasks = build_tasks()
     results = {}
-    for name, (ta, tb, fused) in tasks.items():
-        results[name] = bench_strategies(ta, tb, fused, iters=iters)
+    for name in PAPER_WORKLOADS:
+        w = make_workload(name)
+        task_a, task_b = w.tasks
+        dispatch_a, dispatch_b = w.dispatches
+        results[name] = bench_strategies(
+            task_a, task_b, w.fused_task(),
+            dispatch_a=dispatch_a, dispatch_b=dispatch_b, iters=iters)
 
     # fig1: µs/iter and speedup-over-serial per kernel × strategy
     em.header("fig1: per-kernel scheduling comparison")
@@ -265,6 +278,96 @@ def run_grain(iters: int, em: Emitter):
     return times
 
 
+def run_paper(iters: int, em: Emitter):
+    """The paper's headline table: speedup-over-serial for every workload ×
+    execution variant × substrate.
+
+    Rows: ``paper/<workload>/serial`` (the per-workload baseline, µs per
+    run of all instances) and ``paper/<workload>/<variant>/<substrate>``
+    for variant ∈ {paired, chunked} × substrate ∈ every registered
+    non-serial substrate. Each variant × substrate cell is oracle-checked
+    once (outside the timed region) before it is timed; ``oracle=ok`` in
+    the derived column records that the numbers come from verified runs.
+    """
+    from benchmarks.schedulers import timeit_us
+    from repro.core.schedulers import available_schedulers
+    from repro.tasks.api import TaskScope
+    from repro.workloads import available_workloads, make_workload
+
+    reps = max(iters // 10, 10)
+    warmup = max(reps // 5, 3)
+    substrates = [n for n in available_schedulers() if n != "serial"]
+
+    def timeit(run) -> float:
+        return timeit_us(run, reps, warmup)
+
+    em.header("paper: workload speedup over serial "
+              "(µs per all-instances run; oracle-checked)")
+    for wname in available_workloads():
+        w = make_workload(wname)
+        w.check(w.serial())                    # builds, warms, verifies
+        us_serial = timeit(w.serial)
+        em.row(f"paper/{wname}/serial", us_serial,
+               f"n={w.n_instances};speedup=1.000;oracle=ok")
+        for sub in substrates:
+            with TaskScope(sub) as scope:
+                for variant, run in (
+                        ("paired", lambda: w.paired(scope)),
+                        ("chunked", lambda: w.chunked(scope, grain=1))):
+                    w.check(run())             # verified before timing
+                    us = timeit(run)
+                    em.row(f"paper/{wname}/{variant}/{sub}", us,
+                           f"speedup={us_serial / us:.3f};oracle=ok")
+
+
+def load_baseline(path: str) -> dict:
+    """Read and validate a --compare baseline BENCH file. Called *before*
+    the benchmark sections run, so a missing/corrupt path fails in
+    milliseconds instead of after minutes of timing."""
+    payload = json.loads(Path(path).read_text())
+    if not isinstance(payload.get("sections"), dict):
+        raise SystemExit(f"--compare {path}: not a BENCH file (no sections)")
+    return payload
+
+
+def compare_against(em: Emitter, baseline: dict, tol: float,
+                    label: str = "baseline"):
+    """The measured-trajectory gate: flag every row of this run that is
+    more than ``tol`` slower than the same-named row of an earlier BENCH
+    payload. Returns ``(compared, regressions)``; callers exit non-zero
+    on any regression — and on ``compared == 0``, because a gate whose
+    baseline shares no rows with the run (wrong file, wrong --only
+    section) is vacuous and must fail loudly, not pass silently."""
+    old = {r["name"]: r["us_per_call"]
+           for rows in baseline.get("sections", {}).values() for r in rows}
+    fingerprint = {k: baseline.get("meta", {}).get(k)
+                   for k in ("cpu_count", "spin_pause_every", "python")}
+    regressions = []
+    compared = 0
+    for rows in em.sections.values():
+        for r in rows:
+            base = old.get(r["name"])
+            if base is None or base <= 0 or r["us_per_call"] <= 0:
+                continue
+            compared += 1
+            ratio = r["us_per_call"] / base
+            if ratio > 1.0 + tol:
+                regressions.append({
+                    "name": r["name"], "baseline_us": base,
+                    "us": r["us_per_call"], "ratio": round(ratio, 3)})
+    em.comment(f"compare: {compared} shared rows vs {label} "
+               f"(tol +{tol:.0%}, baseline fingerprint {fingerprint})")
+    for reg in regressions:
+        em.comment(f"REGRESSION {reg['name']}: {reg['baseline_us']:.2f}us -> "
+                   f"{reg['us']:.2f}us (x{reg['ratio']:.2f})")
+    if compared == 0:
+        em.comment("compare: FAILED — baseline shares no rows with this run "
+                   "(wrong file or wrong --only section?)")
+    elif not regressions:
+        em.comment("compare: no per-row regressions")
+    return compared, regressions
+
+
 def run_roofline(em: Emitter):
     from benchmarks.roofline import load_records
 
@@ -289,15 +392,26 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--only", default="all",
                     choices=["all", "fig1", "spsc", "wavefront", "grain",
-                             "roofline"])
+                             "paper", "roofline"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write per-section results (µs + speedups) to "
                          "this JSON file, e.g. BENCH_pr2.json")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="compare this run's rows against an earlier BENCH "
+                         "file; any row slower by more than --compare-tol "
+                         "is flagged and the process exits non-zero (the "
+                         "measured-trajectory gate)")
+    ap.add_argument("--compare-tol", type=float, default=0.25,
+                    help="relative slowdown tolerance for --compare "
+                         "(default 0.25 = +25%%)")
     ap.add_argument("--meta", action="append", default=[], metavar="KEY=VAL",
                     help="extra annotation recorded under meta.notes in the "
                          "--json payload (repeatable), e.g. baselines from "
                          "an earlier PR measured on the same host")
     args = ap.parse_args()
+    # Fail fast on a bad --compare path: validate the baseline before any
+    # benchmark section spends time measuring.
+    baseline = load_baseline(args.compare) if args.compare else None
     em = Emitter()
     t0 = time.time()
     if args.only in ("all", "fig1"):
@@ -308,10 +422,16 @@ def main() -> None:
         run_wavefront(args.iters, em)
     if args.only in ("all", "grain"):
         run_grain(args.iters, em)
+    if args.only in ("all", "paper"):
+        run_paper(args.iters, em)
     if args.only in ("all", "roofline"):
         run_roofline(em)
     total = time.time() - t0
     print(f"# total {total:.1f}s")
+    compared = regressions = None
+    if baseline is not None:
+        compared, regressions = compare_against(
+            em, baseline, args.compare_tol, label=args.compare)
     if args.json:
         import os
 
@@ -331,7 +451,14 @@ def main() -> None:
         for kv in args.meta:
             key, _, val = kv.partition("=")
             meta.setdefault("notes", {})[key] = val
+        if regressions is not None:
+            meta["compare"] = {
+                "baseline": args.compare, "tol": args.compare_tol,
+                "compared_rows": compared, "regressions": regressions,
+            }
         em.dump(args.json, meta=meta)
+    if regressions or compared == 0 and baseline is not None:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -52,7 +52,9 @@ SUBSTRATE_STRATEGIES = {
 }
 
 
-def _timeit(step: Callable[[], None], iters: int, warmup: int) -> float:
+def timeit_us(step: Callable[[], None], iters: int, warmup: int) -> float:
+    """Wall-clock µs per call after warmup — the one timing loop every
+    benchmark section shares (so paper/fig1/spsc numbers stay comparable)."""
     for _ in range(warmup):
         step()
     t0 = time.perf_counter()
@@ -64,16 +66,28 @@ def _timeit(step: Callable[[], None], iters: int, warmup: int) -> float:
 def bench_strategies(task_a: Callable[[], jax.Array],
                      task_b: Callable[[], jax.Array],
                      fused: Callable[[], jax.Array],
-                     *, iters: int = 1000, warmup: int = 50) -> Dict[str, float]:
-    """Returns µs/iteration per strategy; an iteration runs both instances."""
+                     *, dispatch_a: Callable[[], jax.Array] = None,
+                     dispatch_b: Callable[[], jax.Array] = None,
+                     iters: int = 1000, warmup: int = 50) -> Dict[str, float]:
+    """Returns µs/iteration per strategy; an iteration runs both instances.
+
+    ``task_a``/``task_b`` are the workload task closures — they block until
+    the result is ready (the ``repro.workloads`` contract), so scheduled
+    timings measure compute. The ``jax_async_stream`` strategy needs the
+    *raw* non-blocking dispatches to overlap inside the XLA stream; pass
+    them as ``dispatch_a``/``dispatch_b`` (``Workload.dispatches``), else
+    that row degenerates to serial.
+    """
     out: Dict[str, float] = {}
+    dispatch_a = dispatch_a or task_a
+    dispatch_b = dispatch_b or task_b
 
     def run_sync(fn):
-        fn().block_until_ready()
+        jax.block_until_ready(fn())
 
     # --- serial baseline ---------------------------------------------------
-    out["serial"] = _timeit(lambda: (run_sync(task_a), run_sync(task_b)),
-                            iters, warmup)
+    out["serial"] = timeit_us(lambda: (run_sync(task_a), run_sync(task_b)),
+                              iters, warmup)
 
     # --- registry substrates ------------------------------------------------
     # Fixed-role substrates use the paper's producer-participates pattern
@@ -94,7 +108,7 @@ def bench_strategies(task_a: Callable[[], jax.Array],
                     run_sync(task_a)
                     scope.barrier()
 
-            out[strategy] = _timeit(step, iters, warmup)
+            out[strategy] = timeit_us(step, iters, warmup)
 
     # --- thread per task ---------------------------------------------------
     def tpt_step():
@@ -103,18 +117,18 @@ def bench_strategies(task_a: Callable[[], jax.Array],
         run_sync(task_a)
         t.join()
 
-    out["thread_per_task"] = _timeit(tpt_step, max(iters // 4, 100), warmup)
+    out["thread_per_task"] = timeit_us(tpt_step, max(iters // 4, 100), warmup)
 
     # --- async dispatch into the XLA stream --------------------------------
     def async_step():
-        ra = task_a()
-        rb = task_b()
-        ra.block_until_ready()
-        rb.block_until_ready()
+        ra = dispatch_a()
+        rb = dispatch_b()
+        jax.block_until_ready(ra)
+        jax.block_until_ready(rb)
 
-    out["jax_async_stream"] = _timeit(async_step, iters, warmup)
+    out["jax_async_stream"] = timeit_us(async_step, iters, warmup)
 
     # --- fused (one compiled call) -----------------------------------------
-    out["fused_vmap"] = _timeit(lambda: run_sync(fused), iters, warmup)
+    out["fused_vmap"] = timeit_us(lambda: run_sync(fused), iters, warmup)
 
     return out

@@ -13,8 +13,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.paper_kernels import build_tasks  # noqa: E402
 from benchmarks.schedulers import bench_strategies  # noqa: E402
+from repro.workloads import PAPER_WORKLOADS, make_workload  # noqa: E402
 
 
 def main():
@@ -22,11 +22,14 @@ def main():
     ap.add_argument("--iters", type=int, default=200)
     args = ap.parse_args()
 
-    tasks = build_tasks()
     print(f"{'kernel':<8}" + "".join(f"{s:>22}" for s in
           ("serial", "relic_spsc", "jax_async_stream", "fused_vmap")))
-    for name, (ta, tb, fused) in tasks.items():
-        res = bench_strategies(ta, tb, fused, iters=args.iters)
+    for name in PAPER_WORKLOADS:
+        w = make_workload(name)
+        ta, tb = w.tasks
+        da, db = w.dispatches
+        res = bench_strategies(ta, tb, w.fused_task(),
+                               dispatch_a=da, dispatch_b=db, iters=args.iters)
         base = res["serial"]
         row = f"{name:<8}"
         for s in ("serial", "relic_spsc", "jax_async_stream", "fused_vmap"):

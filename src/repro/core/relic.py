@@ -236,6 +236,16 @@ class Relic:
         self._shutdown = True
         self._awake.set()  # release a parked assistant so it can observe shutdown
         self._assistant.join(timeout)
+        if self._assistant.is_alive():
+            # The join expired: the assistant is wedged in a task. Dropping
+            # the reference here would let a later start() spawn a SECOND
+            # consumer on the SPSC ring (single-consumer invariant broken).
+            # Keep the live thread, stay shut down (submit keeps raising,
+            # start() keeps raising "already started"): non-restartable.
+            raise RelicUsageError(
+                f"shutdown(): assistant did not exit within {timeout}s "
+                "(wedged task?); runtime left in a non-restartable state"
+            )
         self._assistant = None
 
     # ---------------------------------------------------------- assistant side
@@ -273,7 +283,11 @@ class Relic:
                     batch[i](*batch[i + 1])
                 except BaseException as e:  # surfaced at the next wait()
                     stats.task_errors += 1
-                    stats.last_error = e
+                    if stats.last_error is None:
+                        # First error wins (the SPI contract shared by every
+                        # substrate — see docs/schedulers.md); later failures
+                        # only bump task_errors.
+                        stats.last_error = e
                 # Atomic per-task publication of completion (store of a
                 # local, not a read-modify-write) so the producer's barrier
                 # observes progress early.
@@ -285,5 +299,11 @@ class Relic:
     def __enter__(self) -> "Relic":
         return self.start()
 
-    def __exit__(self, *exc: Any) -> None:
-        self.shutdown()
+    def __exit__(self, exc_type: Any, *exc: Any) -> None:
+        try:
+            self.shutdown()
+        except RelicUsageError:
+            # A wedged-assistant shutdown is worth raising on a clean exit,
+            # but must never mask the body's own in-flight exception.
+            if exc_type is None:
+                raise

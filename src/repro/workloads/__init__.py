@@ -1,0 +1,41 @@
+"""``repro.workloads`` — the paper's kernels as first-class workloads.
+
+This package is the layer the speedup-over-serial headline table (paper
+§IV/§VII) is produced from, and where every future workload PR lands. Each
+workload is *n* identical instances of one fine-grained kernel plus an
+independent oracle, exposing the same three execution variants through the
+:mod:`repro.tasks.api` façade — ``serial()``, ``paired(scope)`` (the
+paper's two-instance offload, producer runs one half) and
+``chunked(scope, grain)`` (worksharing via ``parallel_for``). See
+:mod:`repro.workloads.base` for the protocol and
+``docs/EXPERIMENTS.md`` for the table recipe
+(``python -m benchmarks.run --only paper``).
+
+Registered workloads: the paper's seven (``bc``, ``bfs``, ``cc``, ``pr``,
+``sssp``, ``tc``, ``json``) plus two scenario-diverse additions
+(``stencil``, ``histogram``).
+"""
+
+from repro.workloads.base import (VARIANTS, Workload, WorkloadOracleError,
+                                  available_workloads, make_workload,
+                                  register_workload, results_agree)
+
+# Importing the workload modules populates the registry.
+from repro.workloads import graphs as _graphs          # noqa: F401
+from repro.workloads import histogram as _histogram    # noqa: F401
+from repro.workloads import jsondoc as _jsondoc        # noqa: F401
+from repro.workloads import stencil as _stencil        # noqa: F401
+
+# The subset reproducing the paper's own table (§IV), in paper order.
+PAPER_WORKLOADS = ("bc", "bfs", "cc", "pr", "sssp", "tc", "json")
+
+__all__ = [
+    "Workload",
+    "WorkloadOracleError",
+    "VARIANTS",
+    "PAPER_WORKLOADS",
+    "available_workloads",
+    "make_workload",
+    "register_workload",
+    "results_agree",
+]

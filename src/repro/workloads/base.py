@@ -1,0 +1,265 @@
+"""The ``Workload`` protocol: the paper's kernels as first-class workloads.
+
+A workload is *n* identical instances of one fine-grained kernel (the paper
+generates two identical graphs / two buffer copies, §IV) plus an oracle.
+Every workload exposes the same three execution variants, all driven
+through the :mod:`repro.tasks.api` façade:
+
+  * ``serial()`` — every instance inline on the calling thread (the
+    paper's baseline; also what warms the jit caches).
+  * ``paired(scope)`` — the paper's two-instance offload (§V/§VII): the
+    back half of the instances is submitted to the scope's substrate, the
+    producer runs the front half itself, then joins the handles.
+  * ``chunked(scope, grain)`` — worksharing loop execution (Maroñas et
+    al., 2020): one ``parallel_for`` over the instances, chunked by
+    ``grain`` instances per task.
+
+Instance task closures **block until the result is ready** (each thunk
+ends in ``jax.block_until_ready``), so every variant times compute, not
+async dispatch — the fix for the PR 1–3 ``benchmarks/paper_kernels._pair``
+bug, inherited by construction here. The raw non-blocking dispatch
+closures remain available as ``dispatches`` for the device-side analogue
+strategies (``jax_async_stream``), where overlap inside the XLA stream is
+the point.
+
+Results are checked two ways by :meth:`Workload.check`: all instances
+must agree with instance 0 (they run identical inputs), and instance 0
+must pass the subclass's independent oracle (``check_one``, NumPy/stdlib
+reference implementations — never the JAX kernel under test).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tasks.api import TaskScope, parallel_for
+
+__all__ = [
+    "Workload",
+    "WorkloadOracleError",
+    "VARIANTS",
+    "results_agree",
+    "register_workload",
+    "available_workloads",
+    "make_workload",
+]
+
+# The uniform execution shapes every workload exposes (benchmarks and the
+# conformance tests iterate this, not hand-rolled lists).
+VARIANTS = ("serial", "paired", "chunked")
+
+
+class WorkloadOracleError(AssertionError):
+    """A workload result failed its oracle (or instances disagreed)."""
+
+
+# --------------------------------------------------------------------- registry
+
+_REGISTRY = {}
+
+
+def register_workload(cls):
+    """Class decorator registering a workload under ``cls.name`` (the same
+    flat name -> factory shape as ``repro.core.schedulers``)."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty name")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_workloads() -> List[str]:
+    """Registered workload names, stable (sorted) order."""
+    return sorted(_REGISTRY)
+
+
+def make_workload(name: str, **kwargs: Any) -> "Workload":
+    """Instantiate a workload by name (inputs built lazily)."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; available: {available_workloads()}"
+        ) from None
+    return factory(**kwargs)
+
+
+def _leaves(tree: Any) -> List[np.ndarray]:
+    return [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
+
+
+def results_agree(a: Any, b: Any, *, rtol: float = 0.0, atol: float = 0.0) -> bool:
+    """True when two instance results (arbitrary pytrees of arrays) match."""
+    la, lb = _leaves(a), _leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(x.shape == y.shape and np.allclose(x, y, rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))
+
+
+class Workload:
+    """Base class: subclasses set ``name``, implement ``_input()`` (the
+    shared base input array) + ``_kernel(x)`` (the single-instance kernel
+    call), and ``check_one(result)`` (the oracle for one instance's
+    result). The base class derives everything else: ``_build()`` gives
+    each instance its **own copy** of the input (the paper's two identical
+    graphs / buffer copies — paired tasks never alias device memory) and
+    ``_build_fused()`` stacks the copies under one ``jit(vmap(kernel))``
+    call. Workloads whose instances are not copy-of-one-input can override
+    ``_build()``/``_build_fused()`` directly.
+
+    ``_build()`` returns ``n_instances`` zero-argument callables, each
+    dispatching the kernel on that instance's own input copy and returning
+    the (possibly still in-flight) result; the base class derives the
+    blocking ``tasks`` from them. Building is lazy and cached — the first
+    access compiles and warms every instance.
+    """
+
+    name: str = ""
+    default_instances: int = 2
+
+    def __init__(self, n_instances: Optional[int] = None):
+        n = self.default_instances if n_instances is None else n_instances
+        if n < 2:
+            raise ValueError(
+                f"workload {self.name!r} needs >= 2 instances for the "
+                f"paired variant, got {n}")
+        self.n_instances = n
+        self._dispatches: Optional[List[Callable[[], Any]]] = None
+        self._tasks: Optional[List[Callable[[], Any]]] = None
+        self._fused: Optional[Callable[[], Any]] = None
+
+    # -- subclass surface --------------------------------------------------
+    def _input(self) -> Any:
+        """The shared base input array each instance gets a copy of."""
+        raise NotImplementedError
+
+    def _kernel(self, x: Any) -> Any:
+        """Dispatch the kernel on one instance's input; may return an
+        in-flight result (the base class blocks in ``tasks``)."""
+        raise NotImplementedError
+
+    def _build(self) -> Sequence[Callable[[], Any]]:
+        copies = [jnp.array(self._input()) for _ in range(self.n_instances)]
+        return [functools.partial(self._kernel, x) for x in copies]
+
+    def _build_fused(self) -> Optional[Callable[[], Any]]:
+        """One compiled call covering every instance (the ``fused_vmap``
+        benchmark strategy — where a TPU-native port of the paper's two
+        SMT lanes ultimately lands). Return None when unsupported."""
+        stacked = jnp.stack([jnp.asarray(self._input())] * self.n_instances)
+        vf = jax.jit(lambda xs: jax.vmap(self._kernel)(xs))
+        return functools.partial(vf, stacked)
+
+    def check_one(self, result: Any) -> None:
+        raise NotImplementedError
+
+    # -- lazy build --------------------------------------------------------
+    @property
+    def dispatches(self) -> List[Callable[[], Any]]:
+        """Raw non-blocking dispatch thunks, one per instance."""
+        if self._dispatches is None:
+            built = list(self._build())
+            if len(built) != self.n_instances:
+                raise RuntimeError(
+                    f"{type(self).__name__}._build() returned {len(built)} "
+                    f"thunks for {self.n_instances} instances")
+            self._dispatches = built
+            for d in built:                  # compile + warm every instance
+                jax.block_until_ready(d())
+        return self._dispatches
+
+    @property
+    def tasks(self) -> List[Callable[[], Any]]:
+        """Blocking task closures: ``dispatch`` + ``block_until_ready``."""
+        if self._tasks is None:
+            def blocking(dispatch):
+                def task():
+                    return jax.block_until_ready(dispatch())
+                task.__name__ = f"{self.name}-instance"
+                return task
+
+            self._tasks = [blocking(d) for d in self.dispatches]
+        return self._tasks
+
+    def fused_task(self) -> Callable[[], Any]:
+        """Blocking thunk for the fused all-instances compiled call."""
+        if self._fused is None:
+            fused = self._build_fused()
+            if fused is None:
+                raise NotImplementedError(
+                    f"workload {self.name!r} has no fused variant")
+
+            def task():
+                return jax.block_until_ready(fused())
+            task.__name__ = f"{self.name}-fused"
+            self._fused = task
+        return self._fused
+
+    # -- the three execution variants --------------------------------------
+    def serial(self) -> List[Any]:
+        """Every instance inline, in order (the paper's serial baseline)."""
+        return [t() for t in self.tasks]
+
+    def paired(self, scope: TaskScope) -> List[Any]:
+        """The paper's paired offload: submit the back half of the
+        instances to the scope's substrate, run the front half on the
+        calling thread (producer-participates, §VI), join the handles.
+        Results come back in instance order."""
+        tasks = self.tasks
+        half = (len(tasks) + 1) // 2          # producer's share, never empty
+        handles = [scope.submit(t) for t in tasks[half:]]
+        mine = [t() for t in tasks[:half]]
+        if not all(h.done() for h in handles):
+            # Advisory hints must never deadlock a join (the SPI rule):
+            # un-park a sleeping worker before blocking on the handles.
+            scope.wake_up_hint()
+        return mine + [h.result() for h in handles]
+
+    def chunked(self, scope: TaskScope, grain: int = 1) -> List[Any]:
+        """Worksharing over the instances: one ``parallel_for``, ``grain``
+        instances per task (the calling thread runs the final chunk)."""
+        tasks = self.tasks
+        out: List[Any] = [None] * len(tasks)
+
+        def body(i: int) -> None:
+            out[i] = tasks[i]()
+
+        parallel_for(scope, len(tasks), body, grain=grain)
+        return out
+
+    # -- oracle ------------------------------------------------------------
+    # Float tolerance for cross-instance agreement: instances run identical
+    # inputs through the same compiled kernel, so exact equality is the
+    # default; subclasses with nondeterministic reductions may relax it.
+    agree_rtol: float = 0.0
+    agree_atol: float = 0.0
+
+    def check(self, results: Sequence[Any]) -> None:
+        """Validate one variant's result list: instance count, cross-instance
+        agreement, then the subclass oracle on instance 0. Raises
+        :class:`WorkloadOracleError` (an ``AssertionError``) on mismatch."""
+        if len(results) != self.n_instances:
+            raise WorkloadOracleError(
+                f"{self.name}: expected {self.n_instances} instance results, "
+                f"got {len(results)}")
+        for i, r in enumerate(results[1:], start=1):
+            if not results_agree(results[0], r, rtol=self.agree_rtol,
+                                 atol=self.agree_atol):
+                raise WorkloadOracleError(
+                    f"{self.name}: instance {i} result disagrees with "
+                    "instance 0 (identical inputs must give identical "
+                    "results)")
+        try:
+            self.check_one(results[0])
+        except WorkloadOracleError:
+            raise
+        except AssertionError as e:
+            raise WorkloadOracleError(f"{self.name}: oracle failed: {e}") from e
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r}, n={self.n_instances})"

@@ -1,0 +1,49 @@
+"""Scenario growth beyond the paper: a byte-histogram workload.
+
+A 256-bin histogram over a 4 KiB pseudo-random byte buffer — the
+scatter-add shape (simdjson/DB-filter adjacent) that complements the
+matvec-shaped graph kernels and the scan-shaped JSON parse, and another
+µs-scale body in the paper's task-size regime. The oracle is
+``np.bincount`` on the same bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.workloads.base import Workload, register_workload
+
+BUF_BYTES = 4096
+BINS = 256
+
+
+@jax.jit
+def byte_histogram(buf: jax.Array) -> jax.Array:
+    """uint8[n] -> int32[256] bin counts."""
+    return jnp.bincount(buf, length=BINS).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=1)
+def _base_buffer() -> np.ndarray:
+    rng = np.random.default_rng(23)
+    return rng.integers(0, BINS, size=BUF_BYTES).astype(np.uint8)
+
+
+@register_workload
+class ByteHistogramWorkload(Workload):
+    name = "histogram"
+
+    def _input(self) -> np.ndarray:
+        return _base_buffer()
+
+    def _kernel(self, buf: jax.Array) -> jax.Array:
+        return byte_histogram(buf)
+
+    def check_one(self, result: Any) -> None:
+        expected = np.bincount(_base_buffer(), minlength=BINS).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(result), expected)

@@ -1,0 +1,48 @@
+"""The paper's JSON structural-parse workload (§IV-B).
+
+Each instance runs :func:`repro.tasks.jsonparse.parse_structural` (the
+simdjson-stage-1 translation) on its own copy of the json.org "widget"
+document. The oracle cross-checks against
+:func:`repro.tasks.jsonparse.oracle_counts` — Python's ``json`` module
+plus a character walk, fully independent of the JAX kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.tasks import jsonparse
+from repro.workloads.base import Workload, WorkloadOracleError, register_workload
+
+
+@register_workload
+class JsonParseWorkload(Workload):
+    name = "json"
+    doc = jsonparse.WIDGET_JSON
+
+    def _input(self) -> jax.Array:
+        return jsonparse.to_bytes(self.doc)
+
+    def _kernel(self, buf: jax.Array) -> Any:
+        return jsonparse.parse_structural(buf)
+
+    def check_one(self, result: Any) -> None:
+        structural, depth, ok = result
+        expected = jsonparse.oracle_counts(self.doc)
+        if not bool(ok):
+            raise WorkloadOracleError("json: kernel flagged a valid document")
+        got_structural = int(np.asarray(structural).sum())
+        if got_structural != expected["structural"]:
+            raise WorkloadOracleError(
+                f"json: {got_structural} structural chars, oracle says "
+                f"{expected['structural']}")
+        depth_np = np.asarray(depth)
+        if int(depth_np.max()) != expected["max_depth"]:
+            raise WorkloadOracleError(
+                f"json: max depth {int(depth_np.max())}, oracle says "
+                f"{expected['max_depth']}")
+        if int(depth_np[-1]) != 0:
+            raise WorkloadOracleError("json: document does not close at depth 0")

@@ -352,6 +352,38 @@ def test_relic_task_error_surfaces_at_wait():
             rt.wait()
 
 
+def test_relic_first_error_wins_not_last():
+    """Regression: ``stats.last_error`` was overwritten per failure, so
+    ``wait()`` raised the LAST error while the SPI (docs/schedulers.md and
+    every other substrate) documents first-error-wins."""
+    with Relic(start_awake=True) as rt:
+        rt.submit(lambda: (_ for _ in ()).throw(KeyError("first")))
+        rt.submit(lambda: 1 / 0)
+        rt.submit(lambda: (_ for _ in ()).throw(IndexError("last")))
+        with pytest.raises(KeyError, match="first"):
+            rt.wait()
+        assert rt.stats.task_errors == 3
+        rt.wait()  # cleared: nothing re-raises
+
+
+def test_relic_shutdown_timeout_on_wedged_task_is_non_restartable():
+    """Regression: ``shutdown(timeout)`` used to null the assistant even
+    when ``join(timeout)`` expired, leaking the live thread — a subsequent
+    ``start()`` would put a second consumer on the SPSC ring."""
+    release = threading.Event()
+    rt = Relic(start_awake=True).start()
+    rt.submit(release.wait)           # wedge the assistant
+    with pytest.raises(RelicUsageError, match="non-restartable"):
+        rt.shutdown(timeout=0.1)
+    with pytest.raises(RelicUsageError):
+        rt.start()                    # no second consumer, ever
+    with pytest.raises(RelicUsageError):
+        rt.submit(lambda: None)       # still shut down
+    release.set()                     # un-wedge; assistant observes shutdown
+    rt.shutdown()                     # now exits cleanly (and is idempotent)
+    rt.shutdown()
+
+
 def test_relic_sleep_hint_parks_assistant():
     rt = Relic(start_awake=False).start()   # asleep until hinted
     time.sleep(0.05)

@@ -78,10 +78,31 @@ def test_first_of_many_errors_wins(name):
     with make_scheduler(name) as sched:
         sched.submit(lambda: (_ for _ in ()).throw(KeyError("first")))
         sched.submit(lambda: 1 / 0)
-        with pytest.raises((KeyError, ZeroDivisionError)):
+        with pytest.raises(KeyError):
             sched.wait()
         assert sched.stats.task_errors == 2
         sched.wait()  # second wait: nothing outstanding, nothing raised
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_first_error_wins_strictly_across_burst_and_rounds(name):
+    """The FIRST error since the last wait() re-raises — never the last
+    (regression: relic once overwrote ``last_error`` per failure). The
+    contract resets per wait() window: after the raising wait(), the next
+    window's own first error wins."""
+    with make_scheduler(name) as sched:
+        sched.submit(lambda: (_ for _ in ()).throw(KeyError("first")))
+        sched.submit_many([(lambda: 1 / 0, (), {}),
+                           (lambda: (_ for _ in ()).throw(IndexError()), (), {})])
+        with pytest.raises(KeyError, match="first"):
+            sched.wait()
+        assert sched.stats.task_errors == 3
+        # next window: its own first error wins, prior errors stay cleared
+        sched.submit(lambda: (_ for _ in ()).throw(ValueError("second window")))
+        sched.submit(lambda: 1 / 0)
+        with pytest.raises(ValueError, match="second window"):
+            sched.wait()
+        assert sched.stats.task_errors == 5
 
 
 @pytest.mark.parametrize("name", ALL)
