@@ -4,6 +4,7 @@ inter-chip ICI rings (collective_matmul)."""
 
 from repro.core.spsc import SpscRing, DEFAULT_CAPACITY
 from repro.core.relic import Relic, RelicStats, RelicUsageError
+from repro.core.relic_pool import RelicPool, RelicPoolStats
 from repro.core.schedulers import (
     Scheduler,
     SchedulerStats,
@@ -21,6 +22,8 @@ __all__ = [
     "Relic",
     "RelicStats",
     "RelicUsageError",
+    "RelicPool",
+    "RelicPoolStats",
     "Scheduler",
     "SchedulerStats",
     "SchedulerUsageError",

@@ -31,7 +31,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Optional, Tuple
+from typing import Any, Callable, Iterable, Optional, Sequence, Tuple
 
 from repro.core.spsc import DEFAULT_CAPACITY, SpscRing
 
@@ -47,6 +47,23 @@ class RelicUsageError(RuntimeError):
     """Raised on API misuse (e.g. submit from the assistant thread)."""
 
 
+def flatten_tasks(
+    tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
+) -> list:
+    """Flatten ``(fn, args, kwargs)`` triples into the ring's ``fn, args``
+    pair stripe (kwargs fold into a ``functools.partial``) — THE task wire
+    format both the pair and the pool push and every assistant pops; keep
+    it in exactly one place."""
+    flat: list = []
+    append = flat.append
+    for fn, args, kwargs in tasks:
+        if kwargs:
+            fn = functools.partial(fn, **kwargs)
+        append(fn)
+        append(args)
+    return flat
+
+
 @dataclass
 class RelicStats:
     """Counters for observability; all updated on the owning thread only."""
@@ -58,6 +75,9 @@ class RelicStats:
     parks: int = 0                   # times the assistant actually parked
     task_errors: int = 0
     last_error: Optional[BaseException] = field(default=None, repr=False)
+    # Submission index (0-based, per runtime) of the task behind
+    # ``last_error`` — how RelicPool orders first-errors across lanes.
+    first_error_index: Optional[int] = None
 
 
 def _default_spin_yield() -> int:
@@ -69,6 +89,28 @@ def _default_spin_yield() -> int:
 
 
 SPIN_PAUSE_EVERY = _default_spin_yield()
+
+
+def resolve_spin_pause_every() -> int:
+    """The spin/yield cadence for a *new* runtime instance: the
+    ``RELIC_SPIN_PAUSE_EVERY`` env var when set (a positive int), else the
+    cpu-count heuristic. Re-read per ``Relic``/``RelicPool``/worker
+    instance — not frozen at import — so a 2-cpu CI container and a local
+    SMT host can be benchmarked against the same code path by exporting
+    one variable instead of editing the module."""
+    raw = os.environ.get("RELIC_SPIN_PAUSE_EVERY")
+    if raw is None or raw == "":
+        return _default_spin_yield()
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"RELIC_SPIN_PAUSE_EVERY must be a positive int, got {raw!r}"
+        ) from None
+    if value <= 0:
+        raise ValueError(
+            f"RELIC_SPIN_PAUSE_EVERY must be a positive int, got {raw!r}")
+    return value
 
 
 class Relic:
@@ -86,13 +128,16 @@ class Relic:
         rt.shutdown()
     """
 
-    def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = False):
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = False,
+                 name: str = "relic-assistant"):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         # Two ring slots per task (the fn, args stripe — see the task
         # protocol note above), so `capacity` stays a task count.
         self._ring = SpscRing(2 * capacity)
         self._push2 = self._ring.push2      # pre-bound: the submit hot path
+        self._name = name                   # assistant thread name (pool lanes)
+        self._spin_pause_every = resolve_spin_pause_every()
         self.stats = RelicStats()
         self._completed = 0              # written by assistant only
         self._shutdown = False
@@ -109,7 +154,7 @@ class Relic:
             raise RelicUsageError("Relic runtime already started")
         self._main_ident = threading.get_ident()
         self._assistant = threading.Thread(
-            target=self._assistant_loop, name="relic-assistant", daemon=True
+            target=self._assistant_loop, name=self._name, daemon=True
         )
         self._assistant.start()
         return self
@@ -158,23 +203,25 @@ class Relic:
             self._check_main("submit_batch()")
         if self._shutdown:
             raise RelicUsageError("submit_batch() after shutdown")
-        flat: list = []
-        append = flat.append
-        for fn, args, kwargs in tasks:
-            if kwargs:
-                fn = functools.partial(fn, **kwargs)
-            append(fn)
-            append(args)
+        flat = flatten_tasks(tasks)
         if not flat:
             return
         self.stats.submitted += len(flat) // 2
+        self._push_flat(flat)
+
+    def _push_flat(self, flat: Sequence[Any], start: int = 0,
+                   stop: Optional[int] = None) -> None:
+        """Hand a pre-flattened ``fn, args`` stripe (``flat[start:stop]``)
+        to the ring, busy-waiting under backpressure. Retries advance an
+        offset into ``flat`` (push_many's ``start``): a burst far larger
+        than the ring spins here, and slicing the remainder per sub-burst
+        would be quadratic. ``RelicPool`` pushes each lane's shard of one
+        shared flattened burst through this without slicing it either."""
         ring = self._ring
-        n = len(flat)
-        # Retry by advancing an offset into `flat` (push_many's `start`):
-        # a burst far larger than the ring spins here under backpressure,
-        # and slicing the remainder per sub-burst would be quadratic.
-        pos = ring.push_many(flat)
+        n = len(flat) if stop is None else stop
+        pos = start + ring.push_many(flat, start, n)
         spins = 0
+        pause_every = self._spin_pause_every
         while pos < n:
             if spins == 0:
                 # Advisory hints must not deadlock a full-ring burst: the
@@ -182,9 +229,9 @@ class Relic:
                 self._awake.set()
             self.stats.producer_full_spins += 1
             spins += 1
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % pause_every == 0:
                 time.sleep(0)
-            pushed = ring.push_many(flat, pos)
+            pushed = ring.push_many(flat, pos, n)
             if pushed:
                 pos += pushed
                 spins = 0
@@ -192,6 +239,7 @@ class Relic:
     def _push_spin(self, fn: Callable[..., Any], args: tuple) -> None:
         """Full-ring slow path for submit(): bounded ring is the backpressure."""
         spins = 0
+        pause_every = self._spin_pause_every
         while not self._push2(fn, args):
             if spins == 0:
                 # Hints are advisory (§VI-B): a full ring with a parked
@@ -200,7 +248,7 @@ class Relic:
                 self._awake.set()
             self.stats.producer_full_spins += 1
             spins += 1
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % pause_every == 0:
                 time.sleep(0)  # the Python analogue of `pause`: yield, no park
 
     def wait(self) -> None:
@@ -213,9 +261,10 @@ class Relic:
             # the assistant parked re-issue sleep_hint() after waiting).
             self._awake.set()
         spins = 0
+        pause_every = self._spin_pause_every
         while self._completed < target:
             spins += 1
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % pause_every == 0:
                 time.sleep(0)
         self.stats.completed = self._completed
         if self.stats.last_error is not None:
@@ -255,6 +304,7 @@ class Relic:
         stats = self.stats
         pop_many = ring.pop_many
         spins = 0
+        pause_every = self._spin_pause_every
         while True:
             # Drain the whole burst before re-checking hints or shutdown: one
             # _head publication per burst (pop_many), not one per task. The
@@ -273,7 +323,7 @@ class Relic:
                     continue
                 stats.assistant_empty_spins += 1
                 spins += 1
-                if spins % SPIN_PAUSE_EVERY == 0:
+                if spins % pause_every == 0:
                     time.sleep(0)  # `pause`-like: yield the GIL, stay runnable
                 continue
             spins = 0
@@ -286,7 +336,9 @@ class Relic:
                     if stats.last_error is None:
                         # First error wins (the SPI contract shared by every
                         # substrate — see docs/schedulers.md); later failures
-                        # only bump task_errors.
+                        # only bump task_errors. The submission index lets
+                        # RelicPool order first-errors across lanes.
+                        stats.first_error_index = completed
                         stats.last_error = e
                 # Atomic per-task publication of completion (store of a
                 # local, not a read-modify-write) so the producer's barrier

@@ -1,0 +1,503 @@
+"""RelicPool: the paper's SMT pair scaled to N lanes (one producer, N assistants).
+
+The paper's Relic is deliberately a *two*-thread runtime — one producer and
+one assistant on SMT sibling contexts, joined by a single bounded SPSC ring
+(§VI). This module is the repo's first step past that ceiling, following
+the FastFlow construction (Aldinucci et al., 2009): lock-free SPSC queues
+*compose* into larger networks without giving up the single-producer /
+single-consumer fast path. A ``RelicPool`` is N independent **lanes**, each
+a full :class:`repro.core.relic.Relic` (its own ``SpscRing`` + assistant
+thread + hints + stats), so every lane preserves the exact SPSC invariants
+and cached-index/batch fast paths of the pair — no MPMC queue anywhere, no
+lock on the submit path.
+
+What the pool adds on top of the lanes:
+
+* **Lane-striped submission.** ``submit()`` round-robins a cursor over the
+  lanes; when the target lane's ring is full it tries the other lanes,
+  least-loaded first (by the ring's racy-but-monotonic ``len()`` — a
+  stale read costs balance, never correctness), and busy-waits *sweeping
+  all lanes* only while every ring is full — so a lane wedged behind a
+  long task can never block a submission another lane has room for
+  (bounded backpressure engages pool-wide, not per-lane).
+  ``submit_batch()`` flattens the burst once and deals contiguous shards
+  across the lanes — each lane ``push_many``-ing its window of the
+  *shared* flattened list (no per-lane slicing) — in two phases: a
+  non-blocking pass hands every lane what its ring has room for, then
+  the remainders are swept round-robin, so here too a wedged lane never
+  starves the shards the other lanes already have room to run.
+* **Broadcast hints.** ``sleep_hint()`` / ``wake_up_hint()`` fan out to
+  every lane (paper §VI-B, now meaning "park/unpark the whole pool").
+* **Aggregated stats.** ``stats`` is a live view summing the per-lane
+  ``RelicStats`` counters; ``stats.lanes`` exposes the per-lane detail
+  (striping tests and benchmarks read it).
+* **First-error-wins across lanes.** Each lane already keeps its *own*
+  first error plus the submission index it happened at; ``wait()`` barriers
+  every lane, maps those lane-local indexes back to the pool-global
+  submission order (a per-window seq log the producer appends to), and
+  re-raises the error of the **earliest-submitted** failed task — the SPI
+  contract, extended across lanes. Later failures only bump
+  ``task_errors``, exactly as in the pair.
+
+The pair's usage rules apply unchanged: submission and waiting are
+main-thread-only, assistants cannot submit (no recursive spawn, §VI-A),
+and hints are advisory (they may never deadlock a barrier or a full-ring
+submit). A ``lanes=1`` pool is semantically the pair with striping
+bookkeeping on top — the ``scaling`` benchmark section records what that
+bookkeeping costs (it must stay within a few percent of raw Relic).
+
+Ordering caveat: the pool preserves FIFO *per lane*, not globally — two
+tasks striped onto different lanes may complete in either order. Callers
+needing global FIFO use a single-lane runtime (``workers <= 1`` on the
+scheduler SPI).
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Any, Callable, Iterable, List, Optional, Tuple
+
+from repro.core.relic import (Relic, RelicStats, RelicUsageError,
+                              flatten_tasks)
+from repro.core.spsc import DEFAULT_CAPACITY
+
+__all__ = ["RelicPool", "RelicPoolStats"]
+
+
+class RelicPoolStats:
+    """Live aggregate view over the per-lane :class:`RelicStats`.
+
+    Duck-compatible with ``SchedulerStats`` (``submitted``/``completed``/
+    ``task_errors``/``last_error``) plus the Relic telemetry counters, all
+    computed on read by summing the lanes — there is no second set of hot
+    counters to keep coherent on the submit path. ``lanes`` exposes the
+    underlying per-lane stats objects.
+    """
+
+    __slots__ = ("_pool",)
+
+    def __init__(self, pool: "RelicPool"):
+        self._pool = pool
+
+    def _sum(self, attr: str) -> int:
+        return sum(getattr(lane.stats, attr) for lane in self._pool._lanes)
+
+    @property
+    def submitted(self) -> int:
+        return self._sum("submitted")
+
+    @property
+    def completed(self) -> int:
+        return self._sum("completed")
+
+    @property
+    def task_errors(self) -> int:
+        return self._sum("task_errors")
+
+    @property
+    def producer_full_spins(self) -> int:
+        return self._sum("producer_full_spins")
+
+    @property
+    def assistant_empty_spins(self) -> int:
+        return self._sum("assistant_empty_spins")
+
+    @property
+    def parks(self) -> int:
+        return self._sum("parks")
+
+    @property
+    def last_error(self) -> Optional[BaseException]:
+        """The stashed error (a ``close()``-time capture) if any, else the
+        earliest-submitted pending lane error (the one ``wait()`` would
+        raise). Observability only — reading it clears nothing."""
+        if self._pool._stashed_error is not None:
+            return self._pool._stashed_error
+        best: Tuple[int, Optional[BaseException]] = (0, None)
+        for i, lane in enumerate(self._pool._lanes):
+            err = lane.stats.last_error
+            if err is None:
+                continue
+            seq = self._pool._seq_of(i, lane.stats.first_error_index)
+            if best[1] is None or seq < best[0]:
+                best = (seq, err)
+        return best[1]
+
+    @last_error.setter
+    def last_error(self, value: Optional[BaseException]) -> None:
+        # SchedulerStats duck-compat: the pool adapter stashes a close()-time
+        # error here so it stays observable after shutdown.
+        self._pool._stashed_error = value
+
+    @property
+    def lanes(self) -> Tuple[RelicStats, ...]:
+        return tuple(lane.stats for lane in self._pool._lanes)
+
+    def __repr__(self) -> str:
+        return (f"RelicPoolStats(lanes={len(self._pool._lanes)}, "
+                f"submitted={self.submitted}, completed={self.completed}, "
+                f"task_errors={self.task_errors})")
+
+
+class RelicPool:
+    """N-lane Relic: one producer striping over N independent SPSC pairs.
+
+    Usage mirrors :class:`Relic` exactly::
+
+        pool = RelicPool(lanes=4)
+        pool.start()
+        pool.wake_up_hint()          # broadcast: a parallel section is imminent
+        pool.submit(fn, a, b)        # main thread only; striped over the lanes
+        ...                          # main thread does its own share
+        pool.wait()                  # barrier across every lane
+        pool.sleep_hint()            # broadcast park
+        pool.shutdown()
+    """
+
+    def __init__(self, lanes: int = 2, capacity: int = DEFAULT_CAPACITY,
+                 start_awake: bool = False):
+        if lanes <= 0:
+            raise ValueError(f"lanes must be positive, got {lanes}")
+        self._n = lanes
+        self._lanes = [
+            Relic(capacity=capacity, start_awake=start_awake,
+                  name=f"relic-pool-lane{i}")
+            for i in range(lanes)
+        ]
+        self._rr = 0                 # round-robin cursor (next lane to try)
+        self._seq = 0                # pool-global submission counter
+        # Per-window submission log: _runs[i][k] is the global seq of lane
+        # i's (base[i]+k)-th task. Appended by the producer per submission,
+        # cleared at every wait() — it exists so first-error-wins can be
+        # ordered by *submission order* across lanes, and it is the whole
+        # per-task cost of pooling beyond the lane push itself. Between
+        # waits it is kept bounded by trimming entries for already-
+        # completed tasks (see _trim_runs), so a long-lived scope that
+        # never barriers (pipeline-style fire-and-observe-by-handle use)
+        # holds O(capacity) ints per lane, not one per task ever submitted.
+        self._runs: List[List[int]] = [[] for _ in range(lanes)]
+        self._base = [0] * lanes     # lane-local index of _runs[i][0]
+        self._trim_at = 4 * capacity  # in-flight bound is 2*capacity, so at
+        #                               this length at least half is trimmable
+        self._stashed_error: Optional[BaseException] = None
+        self._shutdown = False
+        self._started = False
+        self._main_ident: Optional[int] = None
+        # Hot-path pre-binds: one tuple load per submit instead of chasing
+        # lane -> ring / lane -> stats chains per task.
+        self._hot = [(lane._push2, lane.stats, self._runs[i])
+                     for i, lane in enumerate(self._lanes)]
+        if lanes == 1:
+            # Degenerate pool == the pair, exactly: with one lane the
+            # cursor never moves, every shard is the whole burst, and
+            # cross-lane error ordering is the lane's own — so the
+            # single-lane configuration pays for none of that bookkeeping
+            # ("scaling must not tax the pair", measured by the scaling
+            # benchmark's lanes1-vs-relic rows).
+            self._lane0 = self._lanes[0]
+            self._push2_0 = self._lane0._push2
+            self._stats0 = self._lane0.stats
+            self._submit2 = self._submit2_single
+        self.stats = RelicPoolStats(self)
+
+    @property
+    def n_lanes(self) -> int:
+        return self._n
+
+    # ------------------------------------------------------------------ roles
+
+    def start(self) -> "RelicPool":
+        if self._started:
+            raise RelicUsageError("RelicPool already started")
+        self._started = True
+        self._main_ident = threading.get_ident()
+        for lane in self._lanes:
+            lane.start()
+        return self
+
+    def _check_main(self, what: str) -> None:
+        ident = threading.get_ident()
+        for lane in self._lanes:
+            if lane._assistant is not None and ident == lane._assistant.ident:
+                # Same rule as the pair (§VI-A): assistants cannot submit.
+                raise RelicUsageError(f"{what} called from an assistant thread")
+        if self._main_ident is not None and ident != self._main_ident:
+            raise RelicUsageError(
+                f"{what} must be called from the main (producer) thread")
+
+    # ------------------------------------------------------------- public API
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        """Submit one task (main thread only), striped round-robin over the
+        lanes with a least-loaded fallback. Busy-waits only when the
+        fallback lane is full too (bounded backpressure)."""
+        if threading.get_ident() != self._main_ident:
+            self._check_main("submit()")   # slow path: classify the misuse
+        if self._shutdown:
+            raise RelicUsageError("submit() after shutdown")
+        if kwargs:
+            fn = functools.partial(fn, **kwargs)
+        self._submit2(fn, args)
+
+    def _submit2_single(self, fn: Callable[..., Any], args: tuple) -> None:
+        """No-checks push for the lanes=1 degenerate pool (bound over
+        ``_submit2`` at construction): the pair's own submit, nothing more."""
+        self._stats0.submitted += 1
+        if self._push2_0(fn, args):
+            return
+        self._lane0._push_spin(fn, args)
+
+    def _submit2(self, fn: Callable[..., Any], args: tuple) -> None:
+        """No-checks striped push (the scheduler adapter's fast path)."""
+        i = self._rr
+        nxt = i + 1
+        self._rr = nxt if nxt < self._n else 0
+        push2, lane_stats, runs = self._hot[i]
+        if push2(fn, args):
+            seq = self._seq
+            self._seq = seq + 1
+            lane_stats.submitted += 1
+            runs.append(seq)
+            if len(runs) >= self._trim_at:
+                self._trim_runs(i)
+            return
+        self._submit_overflow(fn, args)
+
+    def _submit_overflow(self, fn: Callable[..., Any], args: tuple) -> None:
+        """Round-robin target full: try the other lanes least-loaded first
+        (by the ring's racy-but-monotonic ``len()`` — reading another
+        lane's ring from here is the observer case its clamp exists for; a
+        stale read costs balance, never correctness) and busy-wait
+        *sweeping* until some lane accepts. Sweeping — rather than
+        committing to one fallback lane — keeps the pool live when a lane
+        is wedged behind a long task: backpressure engages only while
+        every ring is full."""
+        lanes = self._lanes
+        hot = self._hot
+        n = self._n
+        spins = 0
+        pause_every = lanes[0]._spin_pause_every
+        while True:
+            order = sorted(range(n), key=lambda j: len(lanes[j]._ring))
+            for j in order:
+                push2, lane_stats, runs = hot[j]
+                if push2(fn, args):
+                    seq = self._seq
+                    self._seq = seq + 1
+                    lane_stats.submitted += 1
+                    runs.append(seq)
+                    if len(runs) >= self._trim_at:
+                        self._trim_runs(j)
+                    return
+            if spins == 0:
+                # Advisory hints must not deadlock a full pool: un-park
+                # every assistant once (only this blocked thread could
+                # re-park them).
+                for lane in lanes:
+                    lane._awake.set()
+            lanes[order[0]].stats.producer_full_spins += 1
+            spins += 1
+            if spins % pause_every == 0:
+                time.sleep(0)
+
+    def submit_batch(
+        self, tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
+    ) -> None:
+        """Submit a burst of ``(fn, args, kwargs)`` tasks (main thread
+        only), sharded across the lanes: the burst is flattened once into
+        the ``fn, args`` stripe and split into contiguous near-equal
+        shards dealt out from the round-robin cursor. Delivery is
+        two-phase so a wedged lane cannot starve the others' shards: a
+        first non-blocking pass hands every lane as much of its shard as
+        its ring has room for (one ``push_many`` per lane), then the
+        remainders are busy-wait *swept* round-robin under ring
+        backpressure — every other lane's work is already flowing while
+        the producer waits on a full one, and a cross-shard dependency
+        (a lane-0 task blocking on a handle from lane 1's shard) can
+        always make progress."""
+        if threading.get_ident() != self._main_ident:
+            self._check_main("submit_batch()")
+        if self._shutdown:
+            raise RelicUsageError("submit_batch() after shutdown")
+        flat = flatten_tasks(tasks)
+        k = len(flat) // 2
+        if not k:
+            return
+        n = self._n
+        if n == 1:
+            # Degenerate pool: the whole burst is lane 0's shard, and the
+            # seq log is pointless with nothing to order across.
+            lane = self._lanes[0]
+            lane.stats.submitted += k
+            lane._push_flat(flat)
+            return
+        share, rem = divmod(k, n)
+        seq0 = self._seq
+        self._seq = seq0 + k
+        cursor = self._rr
+        pos = 0                       # task offset into the burst
+        pending: List[list] = []      # [lane_idx, next_slot, stop_slot]
+        for step in range(n):
+            take = share + (1 if step < rem else 0)
+            if take == 0:
+                break                 # k < n: only the first k lanes get one
+            i = cursor + step
+            if i >= n:
+                i -= n
+            lane = self._lanes[i]
+            start2, stop2 = 2 * pos, 2 * (pos + take)
+            # Shard accounting is committed up front (the lane WILL get
+            # these tasks before submit_batch returns); only the ring
+            # hand-off is deferred when the ring lacks room right now.
+            lane.stats.submitted += take
+            self._runs[i].extend(range(seq0 + pos, seq0 + pos + take))
+            if len(self._runs[i]) >= self._trim_at:
+                self._trim_runs(i)
+            pushed = lane._ring.push_many(flat, start2, stop2)
+            if start2 + pushed < stop2:
+                pending.append([i, start2 + pushed, stop2])
+            pos += take
+        # Advance the cursor by the burst remainder so the next burst's
+        # +1 shards (and the next single submit) land on fresh lanes.
+        self._rr = (cursor + rem) % n
+        if pending:
+            self._sweep_remainders(flat, pending)
+
+    def _sweep_remainders(self, flat: list, pending: List[list]) -> None:
+        """Phase 2 of a burst: drain shard remainders into their lanes,
+        sweeping all of them each iteration (never committing to one full
+        lane) and yielding under full-pool backpressure. Partial pushes
+        are always pair-aligned: every publication is even-sized, so the
+        free-slot count every ``push_many`` sees is even by induction."""
+        lanes = self._lanes
+        spins = 0
+        pause_every = lanes[0]._spin_pause_every
+        while pending:
+            progressed = False
+            for entry in list(pending):
+                i, next2, stop2 = entry
+                pushed = lanes[i]._ring.push_many(flat, next2, stop2)
+                if pushed:
+                    progressed = True
+                    next2 += pushed
+                    if next2 >= stop2:
+                        pending.remove(entry)
+                    else:
+                        entry[1] = next2
+            if not pending:
+                return
+            if not progressed:
+                if spins == 0:
+                    # Advisory hints must not deadlock a burst: a parked
+                    # assistant is a stalled lane's only possible drain.
+                    for i, _, _ in pending:
+                        lanes[i]._awake.set()
+                lanes[pending[0][0]].stats.producer_full_spins += 1
+                spins += 1
+                if spins % pause_every == 0:
+                    time.sleep(0)
+
+    def wait(self) -> None:
+        """Barrier across every lane; first-error-wins by submission order.
+
+        Each lane's own ``wait()`` raises that lane's first error; the pool
+        collects them, maps each to its pool-global submission index, and
+        re-raises the earliest-submitted one. All other errors from this
+        window are dropped from the error channel (they remain counted in
+        ``stats.task_errors``) — the same later-failures-only-bump rule the
+        pair applies within one lane."""
+        self._check_main("wait()")
+        errors: List[Tuple[int, BaseException]] = []
+        for i, lane in enumerate(self._lanes):
+            try:
+                lane.wait()
+            except BaseException as e:
+                errors.append((self._seq_of(i, lane.stats.first_error_index), e))
+        for i, lane in enumerate(self._lanes):
+            self._base[i] = lane.stats.submitted
+            self._runs[i].clear()
+        if errors:
+            errors.sort(key=lambda pair: pair[0])
+            raise errors[0][1]
+
+    def _trim_runs(self, lane_idx: int) -> None:
+        """Drop seq-log entries for tasks the lane has already completed,
+        keeping a pending first error's entry mappable. Called from the
+        submit paths when a lane's log reaches ``_trim_at`` (amortized
+        O(1) per task): between barriers the log then stays O(capacity) —
+        the in-flight bound — instead of one entry per task ever
+        submitted, so fire-and-observe-by-handle consumers that never
+        call ``wait()`` cannot grow it without bound. ``_completed`` is a
+        racy cross-thread read, but it only ever undercounts: trimming
+        too little is safe, and an error recorded at-or-after
+        ``_completed`` is by construction still in the log."""
+        lane = self._lanes[lane_idx]
+        base = self._base[lane_idx]
+        keep_from = lane._completed
+        if lane.stats.last_error is not None:
+            fei = lane.stats.first_error_index
+            if fei is not None and fei < keep_from:
+                keep_from = fei        # the pending error must stay mappable
+        drop = keep_from - base
+        if drop > 0:
+            del self._runs[lane_idx][:drop]
+            self._base[lane_idx] = base + drop
+
+    def _seq_of(self, lane_idx: int, local_idx: Optional[int]) -> int:
+        """Pool-global submission seq of lane ``lane_idx``'s ``local_idx``-th
+        task (this window). Out-of-window indexes (defensive: should not
+        happen — errors are cleared per window) order last."""
+        if local_idx is None:
+            return self._seq
+        off = local_idx - self._base[lane_idx]
+        runs = self._runs[lane_idx]
+        if 0 <= off < len(runs):
+            try:
+                return runs[off]
+            except IndexError:
+                # Racy observer (the stats view's last_error getter runs on
+                # any thread): the producer's wait() may clear the window
+                # log between the bounds check and the index. Fall through.
+                pass
+        return self._seq
+
+    # ------------------------------------------------------- hints (broadcast)
+
+    def wake_up_hint(self) -> None:
+        """Broadcast §VI-B wake hint: unpark every lane's assistant."""
+        for lane in self._lanes:
+            lane.wake_up_hint()
+
+    def sleep_hint(self) -> None:
+        """Broadcast §VI-B sleep hint: every lane's assistant may park."""
+        for lane in self._lanes:
+            lane.sleep_hint()
+
+    # -------------------------------------------------------------- lifecycle
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        """Shut down every lane. If any lane's assistant is wedged past its
+        join timeout the pool (like the pair) becomes non-restartable: the
+        first such error re-raises after *all* lanes were attempted."""
+        self._shutdown = True
+        first_err: Optional[RelicUsageError] = None
+        for lane in self._lanes:
+            try:
+                lane.shutdown(timeout)
+            except RelicUsageError as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+
+    def __enter__(self) -> "RelicPool":
+        return self.start()
+
+    def __exit__(self, exc_type: Any, *exc: Any) -> None:
+        try:
+            self.shutdown()
+        except RelicUsageError:
+            if exc_type is None:
+                raise

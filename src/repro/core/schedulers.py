@@ -15,6 +15,9 @@ Substrate-to-paper-framework mapping (see docs/schedulers.md):
   ==========  =====================================  =======================
   serial      run inline on the producer thread      the serial baseline
   relic       busy-wait SPSC ring, fixed roles       Relic (the paper's §VI)
+  relic-pool  N lanes, each its own SPSC ring +      Relic scaled past the
+              assistant; lane-striped submission     SMT pair (lanes=N)
+  relic2/4    relic-pool at lanes=2 / lanes=4        convenience names
   spin        mutex-protected deque + spin waits     X-OpenMP (lock + spin)
   condvar     bounded queue, condvar suspension      GNU OpenMP (suspension)
   pool        general thread pool + futures          oneTBB / Taskflow
@@ -45,6 +48,12 @@ The observable contract (enforced by tests/test_schedulers_conformance.py):
     already suspend when idle.
   * ``stats`` exposes at least ``submitted``, ``completed``,
     ``task_errors``, and ``last_error``.
+  * ``workers`` (optional, defaulting to 1 via ``getattr`` at use sites)
+    advertises how many worker threads can run tasks concurrently —
+    0 for serial (inline), 1 for the single-assistant substrates, N for
+    pools. Consumers like ``repro.tasks.api.parallel_for`` derive their
+    default grain from it; global FIFO is only guaranteed when
+    ``workers <= 1``.
 
 ``submit()``/``wait()`` are owning-thread-only, mirroring Relic's
 no-recursive-spawn rule (paper §VI-A): a task may not submit more tasks.
@@ -61,7 +70,9 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
                     Tuple, runtime_checkable)
 
-from repro.core.relic import SPIN_PAUSE_EVERY, Relic, RelicUsageError
+from repro.core.relic import (Relic, RelicUsageError,
+                              resolve_spin_pause_every)
+from repro.core.relic_pool import RelicPool
 from repro.core.spsc import DEFAULT_CAPACITY
 
 __all__ = [
@@ -70,6 +81,7 @@ __all__ = [
     "SchedulerUsageError",
     "SerialScheduler",
     "RelicScheduler",
+    "RelicPoolScheduler",
     "SpinQueueScheduler",
     "CondvarQueueScheduler",
     "PoolScheduler",
@@ -153,6 +165,13 @@ def make_scheduler(name: str, **kwargs: Any) -> "Scheduler":
 
 class _SchedulerBase:
     """Shared plumbing: owning-thread checks, lifecycle flags, hints."""
+
+    # Advertised concurrent-worker count (the optional SPI property):
+    # how many worker threads can run tasks at once. 1 is the SPI-wide
+    # default (a single assistant/worker); serial overrides with 0 and
+    # pools with their lane/thread count. ``repro.tasks.api`` reads it
+    # via getattr so borrowed third-party substrates need not have it.
+    workers: int = 1
 
     def __init__(self) -> None:
         self.stats = SchedulerStats()
@@ -238,6 +257,8 @@ class SerialScheduler(_SchedulerBase):
     (e.g. pipelines in environments where spawning threads is undesirable).
     """
 
+    workers = 0        # no worker threads: parallel_for runs fully inline
+
     def __init__(self, capacity: int = DEFAULT_CAPACITY):
         super().__init__()
         del capacity  # no queue: nothing to bound
@@ -255,8 +276,78 @@ class SerialScheduler(_SchedulerBase):
         self._raise_pending()
 
 
+class _RelicAdapterBase(_SchedulerBase):
+    """Shared adapter plumbing for the Relic-family runtimes (the pair and
+    the pool). Everything here is the non-hot-path boilerplate both
+    adapters need verbatim — lifecycle, batch-SPI guards, misuse
+    classification, the close()-must-not-raise error stash — factored out
+    so a contract change cannot silently diverge the two. Only the merged
+    ``submit()`` fast path stays per-adapter (its whole point is being
+    inlined against one runtime's internals).
+
+    Subclass ``__init__`` must set ``self._rt`` to the backing runtime:
+    anything exposing ``start``/``submit_batch``/``wait``/``sleep_hint``/
+    ``wake_up_hint``/``shutdown``/``_check_main`` and a ``stats`` object
+    whose ``last_error`` is assignable (``RelicStats`` field /
+    ``RelicPoolStats`` setter)."""
+
+    _rt: Any
+
+    @property  # type: ignore[override]
+    def stats(self):
+        return self._rt.stats
+
+    @stats.setter
+    def stats(self, value):  # _SchedulerBase.__init__ assigns; ignore it
+        pass
+
+    def _start_impl(self) -> None:
+        self._rt.start()
+
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        if not self._started:
+            raise SchedulerUsageError("submit_many() before start()")
+        if self._closed:
+            raise SchedulerUsageError("submit_many() after close()")
+        self._rt.submit_batch(tasks)
+
+    def _submit_misuse(self, what: str) -> None:
+        """Slow path: classify (and raise) the fast-path rejection."""
+        if not self._started:
+            # The runtime itself would accept this (roles are fixed at
+            # start()); the uniform contract says it must raise, like
+            # every substrate.
+            raise SchedulerUsageError(f"{what} before start()")
+        if self._closed:
+            raise SchedulerUsageError(f"{what} after close()")
+        self._rt._check_main(what)         # wrong thread (incl. assistants)
+        raise SchedulerUsageError(f"{what} after shutdown")
+
+    def wait(self) -> None:
+        # The runtimes themselves guarantee advisory hints cannot deadlock
+        # the barrier (wait/full-ring submit un-park assistants).
+        self._rt.wait()
+
+    def sleep_hint(self) -> None:
+        self._rt.sleep_hint()
+
+    def wake_up_hint(self) -> None:
+        self._rt.wake_up_hint()
+
+    def _close_impl(self) -> None:
+        try:
+            # Drain and update counters. close() must not raise, but the
+            # error stays observable on stats (RelicStats keeps the field;
+            # RelicPoolStats stashes it through its setter).
+            self._rt.wait()
+        except BaseException as e:
+            self._rt.stats.last_error = e
+        self._rt.shutdown()
+
+
 @register_scheduler("relic")
-class RelicScheduler(_SchedulerBase):
+class RelicScheduler(_RelicAdapterBase):
     """The paper's design (§VI): busy-wait SPSC ring, fixed producer and
     assistant roles. Adapter over :class:`repro.core.relic.Relic`;
     ``stats`` is the underlying ``RelicStats`` (a superset of
@@ -273,22 +364,12 @@ class RelicScheduler(_SchedulerBase):
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = True):
         super().__init__()
-        self._relic = Relic(capacity=capacity, start_awake=start_awake)
+        self._rt = self._relic = Relic(capacity=capacity,
+                                       start_awake=start_awake)
         # Hot-path pre-binds: one attribute load each per submit, resolved
         # once here instead of chasing the relic -> ring chain per task.
         self._push2 = self._relic._push2
         self._rstats = self._relic.stats
-
-    @property  # type: ignore[override]
-    def stats(self):
-        return self._relic.stats
-
-    @stats.setter
-    def stats(self, value):  # _SchedulerBase.__init__ assigns; ignore it
-        pass
-
-    def _start_impl(self) -> None:
-        self._relic.start()
 
     def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
         # _closed covers relic._shutdown (close() is its only caller), and
@@ -304,44 +385,97 @@ class RelicScheduler(_SchedulerBase):
             return
         self._relic._push_spin(fn, args)
 
-    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
-                                                tuple, dict]]) -> None:
-        if not self._started:
-            raise SchedulerUsageError("submit_many() before start()")
-        if self._closed:
-            raise SchedulerUsageError("submit_many() after close()")
-        self._relic.submit_batch(tasks)
 
-    def _submit_misuse(self, what: str) -> None:
-        """Slow path: classify (and raise) the fast-path rejection."""
-        if not self._started:
-            # Relic itself would accept this (roles are fixed at start());
-            # the uniform contract says it must raise, like every substrate.
-            raise SchedulerUsageError(f"{what} before start()")
-        if self._closed:
-            raise SchedulerUsageError(f"{what} after close()")
-        self._relic._check_main(what)      # wrong thread (incl. assistant)
-        raise SchedulerUsageError(f"{what} after shutdown")
+@register_scheduler("relic-pool")
+class RelicPoolScheduler(_RelicAdapterBase):
+    """Relic scaled past the SMT pair (see ``repro.core.relic_pool``): N
+    lanes, each an independent SPSC ring + assistant preserving the exact
+    invariants and fast paths of the pair; the producer stripes submissions
+    round-robin with a least-loaded fallback and shards ``submit_many``
+    bursts across the lanes in one pass. ``stats`` is the live aggregate
+    ``RelicPoolStats`` view (``stats.lanes`` has the per-lane detail).
 
-    def wait(self) -> None:
-        # Relic itself guarantees advisory hints cannot deadlock the
-        # barrier (wait/full-ring submit un-park the assistant).
-        self._relic.wait()
+    Like :class:`RelicScheduler`, ``submit()`` is a merged fast path
+    rather than a layered forwarder: one branch covers both the adapter's
+    and the pool's contract checks, then the pre-bound striped push runs.
+    ``capacity`` is **per lane** (each lane is its own bounded ring), so
+    the backpressure bound is ``2 × capacity`` per lane — still a
+    constant, never unbounded growth.
 
-    def sleep_hint(self) -> None:
-        self._relic.sleep_hint()
+    Ordering: FIFO holds per lane, not globally (``workers = lanes``);
+    callers needing global FIFO use a ``workers <= 1`` substrate.
+    Registered as ``relic-pool`` (``lanes=N`` keyword, default 2) with
+    convenience names ``relic2`` and ``relic4``."""
 
-    def wake_up_hint(self) -> None:
-        self._relic.wake_up_hint()
+    def __init__(self, capacity: int = DEFAULT_CAPACITY, lanes: int = 2,
+                 start_awake: bool = True):
+        super().__init__()
+        self._rt = self._pool = RelicPool(lanes=lanes, capacity=capacity,
+                                          start_awake=start_awake)
+        # Hot-path pre-bind: the pool's no-checks striped push.
+        self._submit2 = self._pool._submit2
+        if lanes == 1:
+            # Degenerate pool, adapter edition: shadow submit() with a
+            # closure whose hot path is byte-for-byte the pair adapter's
+            # (free-variable loads, no pool hop) — the lanes=1 scaling
+            # rows must measure the pair, not an extra call frame.
+            lane0 = self._pool._lane0
+            push2 = self._pool._push2_0
+            rstats = self._pool._stats0
 
-    def _close_impl(self) -> None:
-        try:
-            # Update completion counters. close() must not raise, but the
-            # error stays observable in stats (Relic.wait pops it to raise).
-            self._relic.wait()
-        except BaseException as e:
-            self._relic.stats.last_error = e
-        self._relic.shutdown()
+            def submit_single(fn: Callable[..., Any], *args: Any,
+                              **kwargs: Any) -> None:
+                if (self._closed or not self._started
+                        or threading.get_ident() != self._owner):
+                    self._submit_misuse("submit()")
+                rstats.submitted += 1
+                if kwargs:
+                    fn = functools.partial(fn, **kwargs)
+                if push2(fn, args):
+                    return
+                lane0._push_spin(fn, args)
+
+            self.submit = submit_single    # instance attr shadows the method
+
+    @property
+    def workers(self) -> int:  # type: ignore[override]
+        return self._pool.n_lanes
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> None:
+        # Same merged contract check as RelicScheduler: _closed covers
+        # pool shutdown (close() is its only caller) and _owner equals the
+        # pool's main ident (start() runs on one thread).
+        if (self._closed or not self._started
+                or threading.get_ident() != self._owner):
+            self._submit_misuse("submit()")
+        if kwargs:
+            fn = functools.partial(fn, **kwargs)
+        self._submit2(fn, args)
+
+
+def _register_pool_convenience(name: str, lanes: int) -> None:
+    """Fixed-lane-count convenience names (``relic2``/``relic4``): the same
+    ``RelicPoolScheduler``, pre-parameterized, so benchmark matrices and
+    ``scheduler=`` strings can name a lane count without kwargs plumbing."""
+
+    def factory(**kwargs: Any) -> RelicPoolScheduler:
+        if kwargs.setdefault("lanes", lanes) != lanes:
+            # The name IS the lane count: a row or stats dump labelled
+            # relic4 must never secretly be a 2-lane pool. Overriding
+            # lanes is what the generic "relic-pool" name is for.
+            raise ValueError(
+                f"{name!r} is fixed at lanes={lanes}; got "
+                f"lanes={kwargs['lanes']} (use 'relic-pool' to pick a "
+                "lane count)")
+        sched = RelicPoolScheduler(**kwargs)
+        sched.name = name              # instance attr shadows the class name
+        return sched
+
+    _REGISTRY[name] = factory
+
+
+_register_pool_convenience("relic2", 2)
+_register_pool_convenience("relic4", 4)
 
 
 @register_scheduler("spin")
@@ -360,6 +494,10 @@ class SpinQueueScheduler(_SchedulerBase):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self._capacity = capacity
+        # Per-instance spin/yield cadence (RELIC_SPIN_PAUSE_EVERY aware),
+        # same resolution rule as Relic so the spin-vs-relic comparison
+        # benchmarks the same yield regime.
+        self._spin_pause_every = resolve_spin_pause_every()
         self._dq: collections.deque = collections.deque()
         self._lock = threading.Lock()
         self._completed = 0            # worker-only writer
@@ -375,6 +513,7 @@ class SpinQueueScheduler(_SchedulerBase):
 
     def _loop(self) -> None:
         spins = 0
+        pause_every = self._spin_pause_every
         while True:
             item = None
             with self._lock:
@@ -387,7 +526,7 @@ class SpinQueueScheduler(_SchedulerBase):
                     self._awake.wait()
                     continue
                 spins += 1
-                if spins % SPIN_PAUSE_EVERY == 0:
+                if spins % pause_every == 0:
                     time.sleep(0)
                 continue
             spins = 0
@@ -412,7 +551,7 @@ class SpinQueueScheduler(_SchedulerBase):
                 # blocked thread could re-park it).
                 self._awake.set()
             spins += 1               # bounded queue: spin until a slot frees
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % self._spin_pause_every == 0:
                 time.sleep(0)
         self.stats.submitted += 1
 
@@ -439,7 +578,7 @@ class SpinQueueScheduler(_SchedulerBase):
             if spins == 0:
                 self._awake.set()     # same advisory-hint rule as submit()
             spins += 1
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % self._spin_pause_every == 0:
                 time.sleep(0)
 
     def wait(self) -> None:
@@ -448,9 +587,10 @@ class SpinQueueScheduler(_SchedulerBase):
             # worker (callers wanting it parked re-issue sleep_hint after).
             self._awake.set()
         spins = 0
+        pause_every = self._spin_pause_every
         while self._completed < self.stats.submitted:
             spins += 1
-            if spins % SPIN_PAUSE_EVERY == 0:
+            if spins % pause_every == 0:
                 time.sleep(0)
         self.stats.completed = self._completed
         self._raise_pending()
@@ -583,6 +723,10 @@ class PoolScheduler(_SchedulerBase):
         self._slots = threading.BoundedSemaphore(capacity)
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pending: List[Future] = []
+
+    @property
+    def workers(self) -> int:  # type: ignore[override]
+        return self._workers
 
     def _start_impl(self) -> None:
         self._pool = ThreadPoolExecutor(

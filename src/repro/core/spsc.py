@@ -65,7 +65,12 @@ class SpscRing:
 
     def __len__(self) -> int:
         # Racy but monotonic-safe estimate; exact when called from either end.
-        return self._tail - self._head
+        # A third (observer) thread — e.g. RelicPool's least-loaded lane
+        # picker — can read a fresh _head against a stale _tail and compute
+        # a negative length; clamp so load signals and stats readers never
+        # see one.
+        d = self._tail - self._head
+        return d if d > 0 else 0
 
     def empty(self) -> bool:
         return self._tail == self._head
@@ -108,15 +113,18 @@ class SpscRing:
         self._tail = tail + 2
         return True
 
-    def push_many(self, items: Sequence[Any], start: int = 0) -> int:
-        """Producer side: push as many of ``items[start:]`` as fit, in
+    def push_many(self, items: Sequence[Any], start: int = 0,
+                  stop: Optional[int] = None) -> int:
+        """Producer side: push as many of ``items[start:stop]`` as fit, in
         order, with a single ``_tail`` publication. Returns the number
         pushed (0 when full). Callers loop on the remainder under their own
         wait policy — advancing ``start`` instead of slicing, so retrying a
-        large burst against a full ring never copies the tail."""
+        large burst against a full ring never copies the tail. ``stop``
+        bounds the window without slicing either: RelicPool pushes each
+        lane's shard of one shared flattened burst this way."""
         tail = self._tail
         capacity = self._capacity
-        n = len(items) - start
+        n = (len(items) if stop is None else stop) - start
         if n <= 0:
             return 0        # an exhausted/overshot offset must not move _tail
         free = capacity - (tail - self._cached_head)

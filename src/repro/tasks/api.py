@@ -211,6 +211,11 @@ class TaskScope:
             except USAGE_ERRORS:
                 self._owns = False          # borrowed: already running
         self.substrate: str = getattr(self._sched, "name", type(self._sched).__name__)
+        # The substrate's advertised concurrent-worker count (optional SPI
+        # property, default 1): worksharing constructs derive their default
+        # grain from it — producer + workers shares, the paper's
+        # producer-participates shape generalized past the SMT pair.
+        self.workers: int = getattr(self._sched, "workers", 1)
         # Feature-detect the batch SPI once: registry substrates all have it
         # (natively or via the base-class fallback), but a borrowed
         # third-party Scheduler may predate submit_many.
@@ -406,12 +411,16 @@ def _chunk_ranges(n: int, grain: int) -> List[Tuple[int, int]]:
     return [(lo, min(lo + grain, n)) for lo in range(0, n, grain)]
 
 
-def _resolve_grain(n: int, grain: Optional[int]) -> int:
+def _resolve_grain(n: int, grain: Optional[int], workers: int = 1) -> int:
     if grain is None:
-        # Default: split in two — the producer's half plus the assistant's
-        # half, the paper's SMT-pair shape. Explicit grain is the knob the
-        # grain-sweep benchmark turns (benchmarks/run.py --only grain).
-        return max(1, math.ceil(n / 2))
+        # Default: one near-equal share per execution context — the
+        # substrate's advertised workers plus the producer itself (the
+        # paper's producer-participates shape, §VI, generalized past the
+        # SMT pair: workers=1 keeps the historical split-in-two; a 4-lane
+        # pool splits in five; serial's workers=0 runs the loop inline).
+        # Explicit grain is the knob the grain-sweep benchmark turns
+        # (benchmarks/run.py --only grain).
+        return max(1, math.ceil(n / (max(workers, 0) + 1)))
     if grain <= 0:
         raise ValueError(f"grain must be positive, got {grain}")
     return grain
@@ -435,7 +444,7 @@ def parallel_for(scope: TaskScope, n: int, body: Callable[[int], Any],
         raise ValueError(f"n must be non-negative, got {n}")
     if n == 0:
         return
-    ranges = _chunk_ranges(n, _resolve_grain(n, grain))
+    ranges = _chunk_ranges(n, _resolve_grain(n, grain, scope.workers))
     if len(ranges) == 1:
         if scope._closed:
             raise SchedulerUsageError("parallel_for() on a closed TaskScope")
@@ -481,7 +490,7 @@ def map_reduce(scope: TaskScope, n: int, map_fn: Callable[[int], Any],
         if init is _MISSING:
             raise ValueError("map_reduce over an empty range requires init")
         return init
-    ranges = _chunk_ranges(n, _resolve_grain(n, grain))
+    ranges = _chunk_ranges(n, _resolve_grain(n, grain, scope.workers))
     partials: List[Any] = [None] * len(ranges)  # one slot per chunk: no lock
     join = _ChunkJoin(len(ranges))
 

@@ -1,0 +1,431 @@
+"""RelicPool semantics: lane striping, broadcast hints, cross-lane errors.
+
+The pool-specific half of the PR 5 coverage (the generic Scheduler contract
+for ``relic-pool``/``relic2``/``relic4`` lives in the conformance suite,
+which parametrizes over every registered substrate automatically).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.relic import (Relic, RelicUsageError,
+                              resolve_spin_pause_every)
+from repro.core.relic_pool import RelicPool
+from repro.core.schedulers import make_scheduler
+from repro.core.spsc import SpscRing
+
+LANE_COUNTS = [1, 2, 4]
+
+
+# ------------------------------------------------------------ lane striping
+
+@pytest.mark.parametrize("lanes", LANE_COUNTS)
+def test_submit_stripes_round_robin_over_every_lane(lanes):
+    """Single submissions land on all lanes, evenly (pure round-robin when
+    no ring ever fills)."""
+    done = []
+    with RelicPool(lanes=lanes, start_awake=True) as pool:
+        for i in range(8 * lanes):
+            pool.submit(done.append, i)
+        pool.wait()
+    assert sorted(done) == list(range(8 * lanes))
+    assert [s.submitted for s in pool.stats.lanes] == [8] * lanes
+
+
+@pytest.mark.parametrize("lanes", LANE_COUNTS)
+def test_submit_batch_shards_across_every_lane_in_one_pass(lanes):
+    """A burst is dealt out as contiguous near-equal shards."""
+    done = []
+    with RelicPool(lanes=lanes, start_awake=True) as pool:
+        pool.submit_batch([(done.append, (i,), {}) for i in range(8 * lanes)])
+        pool.wait()
+    assert sorted(done) == list(range(8 * lanes))
+    assert [s.submitted for s in pool.stats.lanes] == [8] * lanes
+
+
+def test_small_burst_rotates_lanes_across_bursts():
+    """A burst smaller than the lane count advances the round-robin cursor
+    by its remainder, so successive small bursts cover all lanes."""
+    with RelicPool(lanes=4, start_awake=True) as pool:
+        for _ in range(4):
+            pool.submit_batch([(lambda: None, (), {})] * 3)
+        pool.wait()
+    assert [s.submitted for s in pool.stats.lanes] == [3, 3, 3, 3]
+
+
+def test_each_lane_preserves_fifo_locally():
+    """The SPSC invariant survives pooling: per-lane completion order is
+    per-lane submission order (global order is explicitly NOT promised)."""
+    lanes = 3
+    per_lane = [[] for _ in range(lanes)]
+    with RelicPool(lanes=lanes, start_awake=True) as pool:
+        for i in range(60):
+            # round-robin: submission i goes to lane i % lanes
+            per = per_lane[i % lanes]
+            pool.submit(per.append, i)
+        pool.wait()
+    for lane_idx, got in enumerate(per_lane):
+        assert got == sorted(got), f"lane {lane_idx} reordered"
+        assert [g % lanes for g in got] == [lane_idx] * len(got)
+
+
+def test_single_lane_pool_is_globally_fifo():
+    out = []
+    with RelicPool(lanes=1, start_awake=True) as pool:
+        for i in range(200):
+            pool.submit(out.append, i)
+        pool.wait()
+    assert out == list(range(200))
+
+
+def test_full_lane_falls_back_to_least_loaded():
+    """When the round-robin target's ring is full, submit() places the task
+    on another (least-loaded) lane instead of spinning on the full one —
+    even while the full lane's assistant is wedged behind a long task."""
+    gate = threading.Event()
+    with RelicPool(lanes=2, capacity=2, start_awake=True) as pool:
+        pool.submit(gate.wait)          # lane 0's assistant blocks here
+        # Deterministic: wait until lane 0's assistant has actually popped
+        # the blocker (ring drained) before filling the ring — a fixed
+        # sleep makes the submitted-count assertions flaky on a loaded
+        # runner.
+        deadline = time.time() + 5
+        while len(pool._lanes[0]._ring) and time.time() < deadline:
+            time.sleep(0.001)
+        assert not len(pool._lanes[0]._ring), "assistant never popped"
+        # Fill lane 0's ring while it is blocked. Round-robin alternates,
+        # so submit 2*capacity+1 tasks: lane 0 receives capacity and is
+        # full, after which its round-robin turns must overflow to lane 1.
+        for i in range(8):
+            pool.submit(lambda: None)
+        lane0, lane1 = pool.stats.lanes
+        assert lane0.submitted == 3     # the blocker + its full ring (cap 2)
+        assert lane1.submitted == 6     # its own turns + every fallback
+        gate.set()
+        pool.wait()
+        assert pool.stats.completed == 9
+
+
+# ----------------------------------------------------------- hint broadcast
+
+def test_hints_broadcast_to_every_lane():
+    lanes = 3
+    pool = RelicPool(lanes=lanes).start()       # start_awake=False: parked
+    try:
+        time.sleep(0.05)
+        assert sum(s.parks for s in pool.stats.lanes) == lanes
+        pool.wake_up_hint()
+        time.sleep(0.05)
+        for lane in pool._lanes:
+            assert lane._awake.is_set()
+        pool.sleep_hint()
+        for lane in pool._lanes:
+            assert not lane._awake.is_set()
+        # Advisory rule survives broadcast: a barrier over parked lanes
+        # un-parks them rather than deadlocking.
+        done = []
+        for i in range(6):
+            pool.submit(done.append, i)
+        pool.wait()
+        assert sorted(done) == list(range(6))
+    finally:
+        pool.shutdown()
+
+
+# ----------------------------------------------- first-error-wins across lanes
+
+def test_first_error_by_submission_order_wins_across_lanes():
+    """Submission order, not lane order, decides which error wait()
+    re-raises: a later-submitted failure on lane 0 must lose to an
+    earlier-submitted failure on lane 1."""
+
+    def boom(exc):
+        raise exc
+
+    with RelicPool(lanes=2, start_awake=True) as pool:
+        pool.submit(lambda: None)               # seq 0 -> lane 0
+        pool.submit(boom, IndexError("seq 1"))  # seq 1 -> lane 1 (earliest)
+        pool.submit(boom, ValueError("seq 2"))  # seq 2 -> lane 0
+        pool.submit(boom, KeyError("seq 3"))    # seq 3 -> lane 1
+        with pytest.raises(IndexError, match="seq 1"):
+            pool.wait()
+        assert pool.stats.task_errors == 3
+        # The channel is cleared: the next window's own first error wins.
+        pool.submit(boom, ZeroDivisionError())  # lane 0
+        with pytest.raises(ZeroDivisionError):
+            pool.wait()
+        assert pool.stats.task_errors == 4
+        done = []
+        pool.submit(done.append, "after")       # still usable
+        pool.wait()
+        assert done == ["after"]
+
+
+def test_first_error_ordering_covers_submit_batch_shards():
+    """Shard striping keeps the submission-order error rule: the earliest
+    failing task of a burst wins even when a lower-numbered lane also
+    fails (with a later task of the same burst)."""
+
+    def boom(exc):
+        raise exc
+
+    tasks = [(lambda: None, (), {}) for _ in range(8)]
+    # lanes=2, burst of 8 -> lane 0 gets seqs 0-3, lane 1 gets seqs 4-7.
+    tasks[4] = (boom, (IndexError("seq 4"),), {})   # lane 1, earliest failure
+    tasks[6] = (boom, (KeyError("seq 6"),), {})     # lane 1
+    tasks[5] = (boom, (ValueError("seq 5"),), {})   # lane 1
+    tasks[7] = (boom, (OSError("seq 7"),), {})      # lane 1
+    with RelicPool(lanes=2, start_awake=True) as pool:
+        pool.submit_batch(tasks)
+        with pytest.raises(IndexError, match="seq 4"):
+            pool.wait()
+        assert pool.stats.task_errors == 4
+
+
+def test_rotated_burst_error_ordering_beats_lane_order():
+    """Discriminates seq-order from lane-order: after the cursor rotates,
+    the HIGHER-numbered lane holds the earlier seqs of the next burst —
+    its failure must win over a lower-numbered lane's later failure (an
+    implementation ordering errors by lane index would raise the wrong
+    one)."""
+
+    def boom(exc):
+        raise exc
+
+    with RelicPool(lanes=2, start_awake=True) as pool:
+        # burst of 3: rem=1 advances the cursor to lane 1 (seqs 0-2 ok)
+        pool.submit_batch([(lambda: None, (), {})] * 3)
+        # burst of 8 from cursor=1: lane 1 gets seqs 3-6, lane 0 seqs 7-10
+        tasks = [(lambda: None, (), {}) for _ in range(8)]
+        tasks[2] = (boom, (IndexError("early, lane 1"),), {})  # seq 5
+        tasks[5] = (boom, (ValueError("late, lane 0"),), {})   # seq 8
+        pool.submit_batch(tasks)
+        lane0, lane1 = pool.stats.lanes
+        assert lane0.submitted == 6 and lane1.submitted == 5  # rotation held
+        with pytest.raises(IndexError, match="early, lane 1"):
+            pool.wait()
+        assert pool.stats.task_errors == 2
+
+
+def test_burst_shards_flow_past_a_wedged_lane():
+    """Two-phase burst delivery: a lane wedged behind a long task (its
+    ring full) must not stop the other lanes' shards of the same burst
+    from being delivered and run — including the cross-shard-dependency
+    shape where the wedged task itself waits on later-shard work."""
+    release = threading.Event()
+    other_done = threading.Event()
+    with RelicPool(lanes=2, capacity=2, start_awake=True) as pool:
+        pool.submit(release.wait)       # wedge lane 0 (popped, blocking)
+        deadline = time.time() + 5
+        while len(pool._lanes[0]._ring) and time.time() < deadline:
+            time.sleep(0.001)
+        pool.submit(lambda: None)       # lane 1's rr turn
+        pool.submit(lambda: None)       # lane 0 ring: 1
+        pool.submit(lambda: None)       # lane 1
+        pool.submit(lambda: None)       # lane 0 ring: 2 == capacity, full
+        # Burst of 8 (cursor is at lane 1): lane 1's shard is tasks[0..3],
+        # lane 0's is tasks[4..7] and cannot be handed off until the wedge
+        # clears. Two-phase delivery means lane 1's shard runs WHILE the
+        # producer is still blocked sweeping lane 0's remainder — the
+        # releaser thread records whether that actually happened before it
+        # clears the wedge (the cross-shard dependency the sweep exists
+        # for). Head-of-line delivery would record False: nothing of lane
+        # 1's shard would run until the 5 s timeout force-released it.
+        done = []
+        tasks = [(done.append, (i,), {}) for i in range(8)]
+        tasks[1] = (other_done.set, (), {})     # lands in lane 1's shard
+
+        ran_before_release = []
+
+        def releaser():
+            ran_before_release.append(other_done.wait(5))
+            release.set()
+
+        t = threading.Thread(target=releaser)
+        t.start()
+        pool.submit_batch(tasks)        # main thread: the only producer
+        t.join(5)
+        pool.wait()
+        assert ran_before_release == [True], \
+            "lane 1's shard never ran past the wedged lane 0"
+    assert sorted(done) == [0, 2, 3, 4, 5, 6, 7]
+
+
+def test_seq_log_stays_bounded_without_wait():
+    """A fire-and-observe consumer that never calls wait() (pipeline-style
+    use on a long-lived scope) must not grow the per-lane seq log one
+    entry per task forever: completed tasks' entries are trimmed on the
+    submit path, keeping the log O(capacity)."""
+    with RelicPool(lanes=2, capacity=8, start_awake=True) as pool:
+        for i in range(5_000):
+            pool.submit(lambda: None)
+        high_water = max(len(r) for r in pool._runs)
+        # in-flight bound is 2*capacity; the log trims at 4*capacity, so
+        # it must never get far past that (slack for the racy _completed)
+        assert high_water <= 2 * pool._trim_at, high_water
+        pool.wait()
+        assert pool.stats.completed == 5_000
+        assert all(len(r) == 0 for r in pool._runs)
+
+
+def test_first_error_ordering_survives_seq_log_trimming():
+    """Submission-order error ordering must hold even after the log has
+    been trimmed many times: a pending error's entry is kept mappable."""
+
+    def boom(exc):
+        raise exc
+
+    with RelicPool(lanes=2, capacity=4, start_awake=True) as pool:
+        for i in range(200):          # many trims at capacity 4
+            pool.submit(lambda: None)
+        # earliest-submitted failure (whatever lane striping/fallback
+        # placed it on) must win over the later one
+        pool.submit(boom, IndexError("earlier"))
+        for i in range(150):          # more trims after the pending error
+            pool.submit(lambda: None)
+        pool.submit(boom, ValueError("later"))
+        with pytest.raises(IndexError, match="earlier"):
+            pool.wait()
+        assert pool.stats.task_errors == 2
+
+
+# ------------------------------------------------------------------- misuse
+
+def test_assistant_threads_cannot_submit():
+    errs = []
+    with RelicPool(lanes=2, start_awake=True) as pool:
+        def recursive():
+            try:
+                pool.submit(lambda: None)
+            except RelicUsageError as e:
+                errs.append(e)
+
+        for _ in range(2):
+            pool.submit(recursive)
+        pool.wait()
+    assert len(errs) == 2
+
+
+def test_submit_after_shutdown_raises_and_lanes_match():
+    pool = RelicPool(lanes=2).start()
+    pool.shutdown()
+    with pytest.raises(RelicUsageError, match="shutdown"):
+        pool.submit(lambda: None)
+    with pytest.raises(RelicUsageError, match="shutdown"):
+        pool.submit_batch([(lambda: None, (), {})])
+    with pytest.raises(RelicUsageError, match="already started"):
+        pool.start()
+
+
+def test_pool_rejects_nonpositive_lanes():
+    with pytest.raises(ValueError, match="lanes"):
+        RelicPool(lanes=0)
+
+
+def test_convenience_names_reject_conflicting_lane_counts():
+    """relic2/relic4 ARE their lane counts: an explicit conflicting
+    lanes= must raise, never silently mislabel a differently-sized pool
+    (BENCH rows are keyed by name). The matching count and the generic
+    name stay configurable."""
+    with pytest.raises(ValueError, match="fixed at lanes=4"):
+        make_scheduler("relic4", lanes=2)
+    assert make_scheduler("relic4", lanes=4).workers == 4   # no-op explicit
+    assert make_scheduler("relic-pool", lanes=3).workers == 3
+
+
+# ----------------------------------------------------------- aggregate stats
+
+def test_stats_aggregate_and_expose_lanes():
+    with RelicPool(lanes=2, start_awake=True) as pool:
+        for i in range(10):
+            pool.submit(lambda: None)
+        pool.wait()
+        assert pool.stats.submitted == 10
+        assert pool.stats.completed == 10
+        assert pool.stats.task_errors == 0
+        assert len(pool.stats.lanes) == 2
+        assert sum(s.submitted for s in pool.stats.lanes) == 10
+        assert "lanes=2" in repr(pool.stats)
+
+
+def test_scheduler_adapter_close_keeps_error_observable():
+    sched = make_scheduler("relic2").start()
+    sched.submit(lambda: 1 / 0)
+    sched.close()
+    assert sched.stats.task_errors == 1
+    assert isinstance(sched.stats.last_error, ZeroDivisionError)
+
+
+# ---------------------------------------- satellite: SpscRing.__len__ clamp
+
+def test_ring_len_clamps_negative_observer_estimate():
+    """A third (observer) thread can see a fresh _head against a stale
+    _tail, making tail-head negative; len() must clamp to 0 (the pool's
+    least-loaded picker and stats readers never see -1). Simulated by
+    writing the counters the way the stale read would present them."""
+    ring = SpscRing(8)
+    for i in range(4):
+        ring.push(i)
+    assert len(ring) == 4
+    ring._head = 5                      # observer: fresh head, stale tail
+    ring._tail = 3
+    assert len(ring) == 0
+
+
+def test_ring_push_many_stop_bounds_the_window():
+    """push_many's stop parameter pushes exactly items[start:stop] — the
+    shard hand-off RelicPool uses on one shared flattened burst."""
+    ring = SpscRing(16)
+    items = list(range(10))
+    assert ring.push_many(items, 2, 7) == 5
+    assert ring.pop_many() == [2, 3, 4, 5, 6]
+    assert ring.push_many(items, 7, 7) == 0     # empty window: no-op
+    assert ring.push_many(items, 8) == 2        # stop=None: to the end
+    assert ring.pop_many() == [8, 9]
+
+
+# ------------------------------- satellite: RELIC_SPIN_PAUSE_EVERY override
+
+def test_spin_pause_every_env_override(monkeypatch):
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", "7")
+    assert resolve_spin_pause_every() == 7
+    rt = Relic()
+    assert rt._spin_pause_every == 7
+    pool = RelicPool(lanes=2)
+    assert all(lane._spin_pause_every == 7 for lane in pool._lanes)
+    spin = make_scheduler("spin")
+    assert spin._spin_pause_every == 7
+    # Re-read per instance, not frozen at import: a later change to the
+    # environment is visible to the next runtime.
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", "3")
+    assert Relic()._spin_pause_every == 3
+
+
+def test_spin_pause_every_env_unset_uses_cpu_heuristic(monkeypatch):
+    monkeypatch.delenv("RELIC_SPIN_PAUSE_EVERY", raising=False)
+    import os
+
+    expected = 1 if (os.cpu_count() or 1) < 3 else 64
+    assert resolve_spin_pause_every() == expected
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", "")
+    assert resolve_spin_pause_every() == expected
+
+
+@pytest.mark.parametrize("bad", ["0", "-3", "many", "1.5"])
+def test_spin_pause_every_env_invalid_raises(monkeypatch, bad):
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", bad)
+    with pytest.raises(ValueError, match="RELIC_SPIN_PAUSE_EVERY"):
+        resolve_spin_pause_every()
+
+
+def test_spin_pause_override_still_completes_work(monkeypatch):
+    """The cadence is a perf knob, never a correctness knob: an aggressive
+    override must not change observable semantics."""
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", "1")
+    done = []
+    with RelicPool(lanes=2, capacity=2, start_awake=True) as pool:
+        pool.submit_batch([(done.append, (i,), {}) for i in range(50)])
+        pool.wait()
+    assert sorted(done) == list(range(50))

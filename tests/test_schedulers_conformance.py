@@ -23,16 +23,45 @@ from repro.tasks.graph import run_wavefronts
 
 ALL = available_schedulers()
 
-# Substrates whose single worker preserves submission order (the pool's two
-# workers may legally reorder; serial runs inline, trivially in order).
-SINGLE_CONSUMER = [n for n in ALL if n != "pool"]
+# Substrates that preserve global submission order: at most one consumer
+# (serial runs inline, trivially in order). Derived from the SPI's
+# advertised `workers` so new substrates classify themselves — the pool's
+# threads and relic-pool's lanes may legally reorder across each other.
+SINGLE_CONSUMER = [
+    n for n in ALL if getattr(make_scheduler(n), "workers", 1) <= 1]
+MULTI_CONSUMER = [n for n in ALL if n not in SINGLE_CONSUMER]
 
 
 def test_registry_is_complete():
     """The paper's comparison set is present under the expected names."""
-    assert {"serial", "relic", "spin", "condvar", "pool"} <= set(ALL)
+    assert {"serial", "relic", "spin", "condvar", "pool",
+            "relic-pool", "relic2", "relic4"} <= set(ALL)
     with pytest.raises(ValueError, match="unknown scheduler"):
         make_scheduler("no-such-substrate")
+
+
+def test_conformance_parametrization_covers_registry():
+    """Every registered substrate is exercised by this suite's
+    parametrization. ``ALL`` is frozen at module import; if a substrate is
+    registered later (a module this file does not import, or an import
+    order change), the parametrized tests silently skip it — this is the
+    tripwire that turns that silence into a failure."""
+    assert ALL == available_schedulers()
+    assert sorted(SINGLE_CONSUMER + MULTI_CONSUMER) == sorted(ALL)
+    # The FIFO split must match the advertised worker counts.
+    for name in ALL:
+        workers = getattr(make_scheduler(name), "workers", 1)
+        assert (name in SINGLE_CONSUMER) == (workers <= 1), name
+
+
+def test_workers_property_advertises_concurrency():
+    """The optional `workers` SPI property: 0 for inline serial, 1 for the
+    single-assistant substrates, lane/thread count for pools."""
+    expected = {"serial": 0, "relic": 1, "spin": 1, "condvar": 1,
+                "pool": 2, "relic-pool": 2, "relic2": 2, "relic4": 4}
+    for name, want in expected.items():
+        assert make_scheduler(name).workers == want, name
+    assert make_scheduler("relic-pool", lanes=3).workers == 3
 
 
 @pytest.mark.parametrize("name", ALL)

@@ -194,10 +194,20 @@ def test_parallel_for_producer_participates(name):
 
 
 @pytest.mark.parametrize("name", ALL)
-def test_parallel_for_default_grain_splits_in_two(name):
+def test_parallel_for_default_grain_matches_advertised_workers(name):
+    """grain=None splits into (workers + 1) near-equal shares — producer
+    participates (paper §VI), generalized past the SMT pair: workers=1
+    keeps the historical split-in-two, a 4-lane pool splits in five, and
+    serial (workers=0) runs the whole loop inline with zero submissions."""
+    import math
+
+    n = 9
     with TaskScope(name) as scope:
-        parallel_for(scope, 9, lambda i: None)   # grain=None -> ceil(9/2)=5
-        assert scope.stats.submitted == 1        # one chunk + inline chunk
+        parallel_for(scope, n, lambda i: None)
+        grain = max(1, math.ceil(n / (scope.workers + 1)))
+        chunks = math.ceil(n / grain)
+        assert scope.stats.submitted == chunks - 1   # last chunk runs inline
+        assert scope.workers == getattr(scope.scheduler, "workers", 1)
 
 
 @pytest.mark.parametrize("name", ALL)

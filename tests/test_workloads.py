@@ -198,6 +198,72 @@ def test_compare_against_flags_only_real_regressions(tmp_path, capsys):
     assert compare_against(em2, baseline, tol=0.25) == (1, [])
 
 
+def test_compare_against_speedup_metric_cancels_host_drift(tmp_path, capsys):
+    """metric='speedup' gates on the recorded speedup-over-serial: a run
+    that is uniformly 2x slower in absolute µs (host drift) passes, a row
+    that actually *lost* speedup is flagged, and rows without a speedup on
+    both sides are skipped rather than miscompared."""
+    from benchmarks.run import Emitter, compare_against, load_baseline
+
+    payload = {
+        "meta": {"cpu_count": 2, "spin_pause_every": 1, "python": "3.10"},
+        "sections": {"paper": [
+            {"name": "paper/bc/serial", "us_per_call": 100.0,
+             "derived": "n=2;speedup=1.000;oracle=ok"},
+            {"name": "paper/bc/paired/relic", "us_per_call": 125.0,
+             "derived": "speedup=0.800;oracle=ok"},
+            {"name": "paper/bc/chunked/relic", "us_per_call": 125.0,
+             "derived": "speedup=0.800;oracle=ok"},
+            {"name": "paper/bc/paired/spin", "us_per_call": 125.0,
+             "derived": "no-speedup-here"},
+        ]},
+    }
+    path = tmp_path / "BENCH_base.json"
+    path.write_text(json_mod.dumps(payload))
+    baseline = load_baseline(str(path))
+
+    em = Emitter()
+    em.sections = {"paper": [
+        # host 2x slower across the board...
+        {"name": "paper/bc/serial", "us_per_call": 200.0,
+         "derived": "n=2;speedup=1.000;oracle=ok"},
+        # ...same relative speedup: NOT a regression under the metric
+        {"name": "paper/bc/paired/relic", "us_per_call": 250.0,
+         "derived": "speedup=0.800;oracle=ok"},
+        # ...but this row genuinely lost speedup (0.8 -> 0.5)
+        {"name": "paper/bc/chunked/relic", "us_per_call": 400.0,
+         "derived": "speedup=0.500;oracle=ok"},
+        # no speedup on the baseline side: skipped, never compared
+        {"name": "paper/bc/paired/spin", "us_per_call": 999.0,
+         "derived": "speedup=0.100"},
+    ]}
+    compared, regs = compare_against(em, baseline, tol=0.25,
+                                     metric="speedup")
+    assert compared == 3          # serial + the two relic rows
+    assert [r["name"] for r in regs] == ["paper/bc/chunked/relic"]
+    assert regs[0]["ratio"] == pytest.approx(1.6)
+    out = capsys.readouterr().out
+    assert "REGRESSION paper/bc/chunked/relic: speedup 0.800 -> 0.500" in out
+    assert "metric speedup" in out
+
+    # the same run under metric='us' flags every drifted row instead
+    compared_us, regs_us = compare_against(em, baseline, tol=0.25)
+    assert {r["name"] for r in regs_us} >= {
+        "paper/bc/serial", "paper/bc/paired/relic"}
+
+    # total collapse must fail the gate loudly, not drop out of it: a cell
+    # whose recorded speedup rounds to 0.000 is a (huge) regression
+    em3 = Emitter()
+    em3.sections = {"paper": [
+        {"name": "paper/bc/paired/relic", "us_per_call": 1e6,
+         "derived": "speedup=0.000;oracle=ok"}]}
+    compared3, regs3 = compare_against(em3, baseline, tol=0.25,
+                                       metric="speedup")
+    assert compared3 == 1
+    assert [r["name"] for r in regs3] == ["paper/bc/paired/relic"]
+    assert regs3[0]["ratio"] > 1000
+
+
 def test_compare_gate_fails_closed(tmp_path, capsys):
     """A gate that gates nothing must fail: zero shared rows is an error,
     and a missing/invalid baseline dies before any timing would run."""
