@@ -23,6 +23,10 @@
           relic-pool per-task overhead at lanes 1/2/4 against the
           single-lane relic pair (lanes=1 must not tax the pair), plus
           the chunked workloads striped over the lanes
+  skew  — skew-resistance A/B: every workload under power-law task
+          costs, chunked over small-ring pools with RelicPool dynamic
+          rebalancing ON vs OFF (static PR 5 striping), lanes 2/4 —
+          the derived ``vs_static`` is the headline of PR 6
   roofline — summary of the dry-run artifacts, if present
 
 Output: ``name,us_per_call,derived`` CSV per line on stdout (unchanged
@@ -467,6 +471,85 @@ def run_scaling(iters: int, em: Emitter):
                        f"speedup={us_serial / us:.3f};oracle=ok")
 
 
+def run_skew(iters: int, em: Emitter):
+    """The skew-resistance A/B: every workload under a power-law task-cost
+    profile (``skew=1.0``: heaviest instance repeats its kernel n times,
+    rank r ~ r**-1 of that), worksharing-chunked at grain=1 over a
+    deliberately small-ring pool (capacity=4, n=16 instances — so burst
+    remainders exist and the sweep actually runs), with RelicPool's
+    dynamic rebalancing ON vs OFF (``rebalance=False`` == the PR 5 static
+    striping) at lanes 2 and 4.
+
+    Rows: ``skew/<workload>/serial`` (the skewed serial baseline),
+    ``skew/<workload>/lanes<N>/rebalance`` and ``.../static``, each
+    oracle-checked before timing. The rebalance rows carry ``vs_static``
+    (its speedup against the static config's, same lanes) — the headline
+    derived value: positive means dynamic load balancing beat static
+    striping under skewed costs. Same measurement discipline as the paper
+    table: noise-floor timing, several full passes, speedups paired
+    within a pass, best pass kept.
+    """
+    from benchmarks.schedulers import timeit_us_floor
+    from repro.core.schedulers import make_scheduler
+    from repro.tasks.api import TaskScope
+    from repro.workloads import available_workloads, make_workload
+
+    passes = 3
+    reps = max(iters // 20, 8)
+    warmup = max(reps // 5, 3)
+    capacity = 4                      # small rings: force remainder sweeps
+    n_instances = 16
+    skew = 1.0
+    lane_counts = [2, 4]
+    modes = [("rebalance", True), ("static", False)]
+
+    workloads = {name: make_workload(name, n_instances=n_instances,
+                                     skew=skew)
+                 for name in available_workloads()}
+    floor: dict = {}
+    speedup: dict = {}
+    for p in range(passes):
+        for wname, w in workloads.items():
+            if p == 0:
+                w.check(w.serial())            # builds, warms, verifies
+            us_serial_p = timeit_us_floor(w.serial, reps, warmup, rounds=3)
+            key = f"skew/{wname}/serial"
+            floor[key] = min(floor.get(key, float("inf")), us_serial_p)
+            for lanes in lane_counts:
+                for mode, rebalance in modes:
+                    sched = make_scheduler("relic-pool", lanes=lanes,
+                                           capacity=capacity,
+                                           rebalance=rebalance)
+                    with TaskScope(sched) as scope:
+                        def run(w=w, scope=scope):
+                            return w.chunked(scope, grain=1)
+
+                        if p == 0:
+                            w.check(run())     # verified before timing
+                        key = f"skew/{wname}/lanes{lanes}/{mode}"
+                        us_p = timeit_us_floor(run, reps, warmup, rounds=3)
+                        floor[key] = min(floor.get(key, float("inf")), us_p)
+                        speedup[key] = max(speedup.get(key, 0.0),
+                                           us_serial_p / us_p)
+
+    em.header("skew: power-law task costs, rebalance vs static striping "
+              f"(chunked grain=1, n={n_instances}, skew={skew}, "
+              f"capacity={capacity}; oracle-checked; floors + best "
+              f"same-pass speedups over {passes} passes)")
+    for wname, w in workloads.items():
+        em.row(f"skew/{wname}/serial", floor[f"skew/{wname}/serial"],
+               f"n={n_instances};skew={skew};speedup=1.000;oracle=ok")
+        for lanes in lane_counts:
+            sp_static = speedup[f"skew/{wname}/lanes{lanes}/static"]
+            for mode, _ in modes:
+                key = f"skew/{wname}/lanes{lanes}/{mode}"
+                derived = f"speedup={speedup[key]:.3f};oracle=ok"
+                if mode == "rebalance":
+                    derived += (f";vs_static="
+                                f"{speedup[key] / sp_static - 1:+.1%}")
+                em.row(key, floor[key], derived)
+
+
 def load_baseline(path: str) -> dict:
     """Read and validate a --compare baseline BENCH file. Called *before*
     the benchmark sections run, so a missing/corrupt path fails in
@@ -580,7 +663,7 @@ def run_roofline(em: Emitter):
 
 
 SECTIONS = ["fig1", "spsc", "wavefront", "grain", "paper", "scaling",
-            "roofline"]
+            "skew", "roofline"]
 
 
 def main() -> None:
@@ -635,6 +718,8 @@ def main() -> None:
         run_paper(args.iters, em)
     if "scaling" in selected:
         run_scaling(args.iters, em)
+    if "skew" in selected:
+        run_skew(args.iters, em)
     if "roofline" in selected:
         run_roofline(em)
     total = time.time() - t0

@@ -77,15 +77,26 @@ class RelicStats:
     last_error: Optional[BaseException] = field(default=None, repr=False)
     # Submission index (0-based, per runtime) of the task behind
     # ``last_error`` — how RelicPool orders first-errors across lanes.
+    # ``first_error_index`` counts primary-ring completions; when the
+    # failed task arrived through the handoff (overflow) ring instead,
+    # ``first_error_handoff_index`` is set (counting handoff completions)
+    # and ``first_error_index`` stays None. Exactly one is non-None while
+    # ``last_error`` is pending; both clear with it (see ``_take_error``).
     first_error_index: Optional[int] = None
+    first_error_handoff_index: Optional[int] = None
 
 
 def _default_spin_yield() -> int:
     """`pause`-cadence adaptation: the paper assumes two hardware contexts
-    (SMT). When the host has them, yield rarely (spin hot, paper §VI-B);
-    when threads outnumber cores (this 1-core container), spin-waiting
-    starves the partner thread across the GIL, so yield every iteration."""
-    return 1 if (os.cpu_count() or 1) < 2 + 1 else 64
+    (SMT, §VI) — producer + assistant fit exactly one SMT core. Yield hot
+    (every iteration) only when the two runtime threads actually outnumber
+    the host's contexts, i.e. on a 1-context host, where spin-waiting
+    starves the partner thread across the GIL. With 2+ contexts — the
+    paper's own target shape included — spin mostly-hot and yield rarely.
+    (The old threshold ``< 2 + 1`` misclassified a 2-context host as
+    oversubscribed, forcing the paper's §VI scenario onto the
+    yield-every-iteration cadence: the PR 6 bugfix.)"""
+    return 1 if (os.cpu_count() or 1) < 2 else 64
 
 
 SPIN_PAUSE_EVERY = _default_spin_yield()
@@ -129,17 +140,25 @@ class Relic:
     """
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, start_awake: bool = False,
-                 name: str = "relic-assistant"):
+                 name: str = "relic-assistant", handoff: bool = False):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         # Two ring slots per task (the fn, args stripe — see the task
         # protocol note above), so `capacity` stays a task count.
         self._ring = SpscRing(2 * capacity)
         self._push2 = self._ring.push2      # pre-bound: the submit hot path
+        # Optional victim-cooperative handoff ring (RelicPool rebalancing):
+        # a second, equally-bounded SPSC ring the *pool producer* fills only
+        # when this lane's primary is backed up, and the assistant drains
+        # only when the primary is empty. Still strictly 1P1C per ring —
+        # same producer thread, same consumer thread, two rings. The plain
+        # pair never allocates it and keeps its original assistant loop.
+        self._oring: Optional[SpscRing] = SpscRing(2 * capacity) if handoff else None
         self._name = name                   # assistant thread name (pool lanes)
         self._spin_pause_every = resolve_spin_pause_every()
         self.stats = RelicStats()
-        self._completed = 0              # written by assistant only
+        self._completed = 0              # written by assistant only (both rings)
+        self._completed_ovf = 0          # handoff-ring completions only
         self._shutdown = False
         self._awake = threading.Event()  # wake_up_hint/sleep_hint state
         if start_awake:
@@ -153,8 +172,10 @@ class Relic:
         if self._assistant is not None:
             raise RelicUsageError("Relic runtime already started")
         self._main_ident = threading.get_ident()
+        target = (self._assistant_loop if self._oring is None
+                  else self._assistant_loop_handoff)
         self._assistant = threading.Thread(
-            target=self._assistant_loop, name=self._name, daemon=True
+            target=target, name=self._name, daemon=True
         )
         self._assistant.start()
         return self
@@ -183,22 +204,30 @@ class Relic:
             self._check_main("submit()")   # slow path: classify the misuse
         if self._shutdown:
             raise RelicUsageError("submit() after shutdown")
-        self.stats.submitted += 1
         if kwargs:
             fn = functools.partial(fn, **kwargs)
+        # Account after the hand-off (not before): an interrupt unwinding
+        # the full-ring spin must not strand submitted > pushed, which
+        # would wedge every later wait() (see submit_batch).
         if self._push2(fn, args):
+            self.stats.submitted += 1
             return
         self._push_spin(fn, args)
+        self.stats.submitted += 1
 
     def submit_batch(
         self, tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
     ) -> None:
         """Submit a burst of ``(fn, args, kwargs)`` tasks (main thread only).
 
-        One role check and one counter update cover the whole burst, which is
-        flattened into the ring's pair stripe and handed off by ``push_many``
-        — a single ``_tail`` store per sub-burst. Busy-waits (ring
-        backpressure) whenever the burst outsizes the free slots."""
+        One role check covers the whole burst, which is flattened into the
+        ring's pair stripe and handed off by ``push_many`` — a single
+        ``_tail`` store per sub-burst. Busy-waits (ring backpressure)
+        whenever the burst outsizes the free slots. Accounting is
+        committed as tasks are handed to the ring, not up front, so a
+        ``BaseException`` (KeyboardInterrupt) escaping the backpressure
+        spin can never strand ``submitted`` above what the assistant will
+        ever see — the next ``wait()`` still terminates."""
         if threading.get_ident() != self._main_ident:
             self._check_main("submit_batch()")
         if self._shutdown:
@@ -206,20 +235,30 @@ class Relic:
         flat = flatten_tasks(tasks)
         if not flat:
             return
-        self.stats.submitted += len(flat) // 2
-        self._push_flat(flat)
+        self._push_flat(flat, account=True)
 
     def _push_flat(self, flat: Sequence[Any], start: int = 0,
-                   stop: Optional[int] = None) -> None:
+                   stop: Optional[int] = None, account: bool = False) -> None:
         """Hand a pre-flattened ``fn, args`` stripe (``flat[start:stop]``)
         to the ring, busy-waiting under backpressure. Retries advance an
         offset into ``flat`` (push_many's ``start``): a burst far larger
         than the ring spins here, and slicing the remainder per sub-burst
         would be quadratic. ``RelicPool`` pushes each lane's shard of one
-        shared flattened burst through this without slicing it either."""
+        shared flattened burst through this without slicing it either.
+        With ``account=True``, ``stats.submitted`` advances with each
+        successful sub-push (after it, never before — an interrupt unwinding
+        from the spin leaves ``submitted <= pushed``, which can only make a
+        later barrier return early by the unaccounted stragglers, never
+        busy-spin forever on tasks that were never handed off)."""
         ring = self._ring
+        stats = self.stats
         n = len(flat) if stop is None else stop
-        pos = start + ring.push_many(flat, start, n)
+        pos = start
+        pushed = ring.push_many(flat, start, n)
+        if pushed:
+            pos += pushed
+            if account:
+                stats.submitted += pushed // 2
         spins = 0
         pause_every = self._spin_pause_every
         while pos < n:
@@ -227,13 +266,15 @@ class Relic:
                 # Advisory hints must not deadlock a full-ring burst: the
                 # parked assistant is the only possible drain (§VI-B rule).
                 self._awake.set()
-            self.stats.producer_full_spins += 1
+            stats.producer_full_spins += 1
             spins += 1
             if spins % pause_every == 0:
                 time.sleep(0)
             pushed = ring.push_many(flat, pos, n)
             if pushed:
                 pos += pushed
+                if account:
+                    stats.submitted += pushed // 2
                 spins = 0
 
     def _push_spin(self, fn: Callable[..., Any], args: tuple) -> None:
@@ -254,6 +295,16 @@ class Relic:
     def wait(self) -> None:
         """Block (busy-wait) until every submitted task has completed."""
         self._check_main("wait()")
+        self._barrier()
+        err = self._take_error()
+        if err is not None:
+            raise err
+
+    def _barrier(self) -> None:
+        """The spin half of ``wait()``: block until every submitted task
+        completed, raising nothing. RelicPool barriers each lane through
+        this so it can map lane-local error indexes to pool-global
+        submission order *before* the error state is consumed."""
         target = self.stats.submitted
         if self._completed < target:
             # Advisory hints must not deadlock the barrier: outstanding
@@ -267,9 +318,30 @@ class Relic:
             if spins % pause_every == 0:
                 time.sleep(0)
         self.stats.completed = self._completed
-        if self.stats.last_error is not None:
-            err, self.stats.last_error = self.stats.last_error, None
-            raise err
+
+    def _take_error(self) -> Optional[BaseException]:
+        """Consume the pending first error, clearing ``last_error`` AND both
+        first-error indexes together. They are one unit of state: clearing
+        the error while leaving an index (the pre-PR 6 bug) let
+        ``RelicPoolStats.last_error`` and ``_trim_runs`` observe a
+        submission index from a dead window."""
+        stats = self.stats
+        err = stats.last_error
+        if err is not None:
+            stats.last_error = None
+            stats.first_error_index = None
+            stats.first_error_handoff_index = None
+        return err
+
+    def _completed_main_estimate(self) -> int:
+        """Lower bound on *primary-ring* completions, safe to read from the
+        producer: the total is read before the handoff count and both only
+        grow, so the difference can only undercount (the clamp covers the
+        pathological interleaving where many handoff tasks complete between
+        the two reads). Exact (== ``_completed``) for a plain pair."""
+        total = self._completed
+        est = total - self._completed_ovf
+        return est if est > 0 else 0
 
     def wake_up_hint(self) -> None:
         """Developer hint: a parallelizable section is imminent (paper §VI-B)."""
@@ -345,6 +417,83 @@ class Relic:
                 # observes progress early.
                 completed += 1
                 self._completed = completed
+
+    def _assistant_loop_handoff(self) -> None:
+        """Assistant loop for a lane with a handoff ring (RelicPool
+        rebalancing). Identical to ``_assistant_loop`` except: when the
+        primary ring is empty, the assistant pulls from its handoff ring
+        before parking/spinning — the victim-cooperative half of the
+        pool's skew resistance. Primary work always drains first, so the
+        lane's own FIFO is untouched; handoff tasks run at lane-idle
+        priority, each ring still strictly one-producer/one-consumer.
+        Kept as a separate loop so the plain pair's drain stays
+        byte-for-byte the paper's two-thread hot path."""
+        ring = self._ring
+        oring = self._oring
+        stats = self.stats
+        pop_many = ring.pop_many
+        opop_many = oring.pop_many
+        spins = 0
+        pause_every = self._spin_pause_every
+        ovf_poll_every = 8  # idle iterations between overflow-ring polls
+        ovf_countdown = 1   # first idle pass polls immediately
+        c_main = 0      # primary-ring completions (local; assistant-only)
+        c_ovf = 0       # handoff-ring completions
+        while True:
+            from_ovf = False
+            batch = pop_many()
+            if not batch:
+                # Primary idle: help with handed-off (rebalanced) work.
+                # An empty-ring pop still pays a cross-thread index read,
+                # so the steady-state idle spin polls the handoff ring
+                # only every few iterations (it is the lane's *cold* path
+                # by construction — the producer fills it only when
+                # primaries are backed up). Shutdown and park force the
+                # poll: both must observe a drained handoff ring first.
+                ovf_countdown -= 1
+                if (ovf_countdown <= 0 or self._shutdown
+                        or not self._awake.is_set()):
+                    ovf_countdown = ovf_poll_every
+                    batch = opop_many()
+                    from_ovf = True
+                if not batch:
+                    if self._shutdown:
+                        return          # both rings drained
+                    if not self._awake.is_set():
+                        stats.parks += 1
+                        self._awake.wait()
+                        continue
+                    stats.assistant_empty_spins += 1
+                    spins += 1
+                    if spins % pause_every == 0:
+                        time.sleep(0)
+                    continue
+            spins = 0
+            for i in range(0, len(batch), 2):
+                try:
+                    batch[i](*batch[i + 1])
+                except BaseException as e:
+                    stats.task_errors += 1
+                    if stats.last_error is None:
+                        # First error wins, as in the primary loop; which
+                        # ring carried the task decides which index field
+                        # RelicPool maps through (seq log vs handoff log).
+                        if from_ovf:
+                            stats.first_error_handoff_index = c_ovf
+                        else:
+                            stats.first_error_index = c_main
+                        stats.last_error = e
+                if from_ovf:
+                    c_ovf += 1
+                    # Publication order matters for _trim_runs' racy reads:
+                    # _completed_ovf first, then the total — a reader that
+                    # takes the total first and the ovf count second can
+                    # only *under*count primary completions (total - ovf),
+                    # so seq-log trimming stays conservative.
+                    self._completed_ovf = c_ovf
+                else:
+                    c_main += 1
+                self._completed = c_main + c_ovf
 
     # ------------------------------------------------------------- context mgr
 

@@ -26,6 +26,20 @@ What the pool adds on top of the lanes:
   non-blocking pass hands every lane what its ring has room for, then
   the remainders are swept round-robin, so here too a wedged lane never
   starves the shards the other lanes already have room to run.
+* **Skew resistance (dynamic load balancing, PR 6).** Static striping
+  pins a task to its lane forever — exactly where irregular (power-law
+  cost) workloads bleed speedup when one lane wedges behind a long task.
+  With ``rebalance=True`` (the default for multi-lane pools) two
+  mechanisms fix that without touching any hot path or SPSC invariant:
+  (1) *re-striping* — a burst remainder the sweep cannot place in its
+  own lane is re-dealt, producer-side, to lanes with room; (2) a
+  *victim-cooperative handoff ring* per lane — a second bounded SPSC
+  ring the producer fills only when primaries are backed up and the
+  lane's assistant drains only when its primary is idle. Every ring
+  stays strictly one-producer/one-consumer (the pool's single producer
+  pushes, that lane's single assistant pops); there is still no MPMC
+  structure and no lock anywhere. ``rebalance=False`` reproduces the
+  static PR 5 pool bit-for-bit.
 * **Broadcast hints.** ``sleep_hint()`` / ``wake_up_hint()`` fan out to
   every lane (paper §VI-B, now meaning "park/unpark the whole pool").
 * **Aggregated stats.** ``stats`` is a live view summing the per-lane
@@ -120,7 +134,7 @@ class RelicPoolStats:
             err = lane.stats.last_error
             if err is None:
                 continue
-            seq = self._pool._seq_of(i, lane.stats.first_error_index)
+            seq = self._pool._pending_error_seq(i, lane.stats)
             if best[1] is None or seq < best[0]:
                 best = (seq, err)
         return best[1]
@@ -157,13 +171,21 @@ class RelicPool:
     """
 
     def __init__(self, lanes: int = 2, capacity: int = DEFAULT_CAPACITY,
-                 start_awake: bool = False):
+                 start_awake: bool = False, rebalance: bool = True):
         if lanes <= 0:
             raise ValueError(f"lanes must be positive, got {lanes}")
         self._n = lanes
+        # Skew resistance (PR 6): with ``rebalance`` on, a burst remainder
+        # stuck behind a wedged lane is re-dealt to lanes with room
+        # (producer-side re-striping — see _rebalance_pending) and each
+        # lane grows a victim-cooperative handoff ring its assistant
+        # drains when idle. Off reproduces the PR 5 static striping
+        # exactly. A single-lane pool has nowhere to re-deal to, so it
+        # never pays for any of it (the degenerate pair path below).
+        self._rebalance = bool(rebalance) and lanes > 1
         self._lanes = [
             Relic(capacity=capacity, start_awake=start_awake,
-                  name=f"relic-pool-lane{i}")
+                  name=f"relic-pool-lane{i}", handoff=self._rebalance)
             for i in range(lanes)
         ]
         self._rr = 0                 # round-robin cursor (next lane to try)
@@ -181,6 +203,14 @@ class RelicPool:
         self._base = [0] * lanes     # lane-local index of _runs[i][0]
         self._trim_at = 4 * capacity  # in-flight bound is 2*capacity, so at
         #                               this length at least half is trimmable
+        # Handoff-ring twin of the seq log: _oruns[i][k] is the global seq
+        # of the (obase[i]+k)-th task the producer pushed into lane i's
+        # handoff ring. Same trim discipline, keyed off the lane's
+        # handoff-completion counter — so first-error-wins ordering
+        # survives re-striping (the seq rides whichever log matches the
+        # ring that carried the task).
+        self._oruns: List[List[int]] = [[] for _ in range(lanes)]
+        self._obase = [0] * lanes
         self._stashed_error: Optional[BaseException] = None
         self._shutdown = False
         self._started = False
@@ -243,11 +273,13 @@ class RelicPool:
 
     def _submit2_single(self, fn: Callable[..., Any], args: tuple) -> None:
         """No-checks push for the lanes=1 degenerate pool (bound over
-        ``_submit2`` at construction): the pair's own submit, nothing more."""
-        self._stats0.submitted += 1
+        ``_submit2`` at construction): the pair's own submit, nothing more.
+        Accounts after the push like the pair (interrupt safety)."""
         if self._push2_0(fn, args):
+            self._stats0.submitted += 1
             return
         self._lane0._push_spin(fn, args)
+        self._stats0.submitted += 1
 
     def _submit2(self, fn: Callable[..., Any], args: tuple) -> None:
         """No-checks striped push (the scheduler adapter's fast path)."""
@@ -273,10 +305,14 @@ class RelicPool:
         *sweeping* until some lane accepts. Sweeping — rather than
         committing to one fallback lane — keeps the pool live when a lane
         is wedged behind a long task: backpressure engages only while
-        every ring is full."""
+        every ring is full. With rebalancing on, "every ring" includes the
+        handoff rings: a pool whose primaries are all backed up hands the
+        task to the least-loaded lane's handoff ring (its assistant pulls
+        from it when its primary goes idle) before resigning to the spin."""
         lanes = self._lanes
         hot = self._hot
         n = self._n
+        rebalance = self._rebalance
         spins = 0
         pause_every = lanes[0]._spin_pause_every
         while True:
@@ -291,6 +327,18 @@ class RelicPool:
                     if len(runs) >= self._trim_at:
                         self._trim_runs(j)
                     return
+            if rebalance:
+                for j in order:
+                    lane = lanes[j]
+                    if lane._oring.push2(fn, args):
+                        seq = self._seq
+                        self._seq = seq + 1
+                        lane.stats.submitted += 1
+                        oruns = self._oruns[j]
+                        oruns.append(seq)
+                        if len(oruns) >= self._trim_at:
+                            self._trim_oruns(j)
+                        return
             if spins == 0:
                 # Advisory hints must not deadlock a full pool: un-park
                 # every assistant once (only this blocked thread could
@@ -316,7 +364,19 @@ class RelicPool:
         backpressure — every other lane's work is already flowing while
         the producer waits on a full one, and a cross-shard dependency
         (a lane-0 task blocking on a handle from lane 1's shard) can
-        always make progress."""
+        always make progress. With rebalancing on, a remainder the sweep
+        cannot place at all is *re-striped* to lanes that do have room
+        (see ``_rebalance_pending``) instead of waiting out its original
+        lane.
+
+        Accounting (``submitted``, the seq logs) is committed as each
+        window is handed to a ring, never before: a ``BaseException``
+        (KeyboardInterrupt) escaping the sweep therefore cannot strand
+        ``submitted`` above what any assistant will ever pop — the
+        pre-PR 6 failure mode where the next ``wait()`` busy-spun
+        forever. The unaccounted residue of an interrupt is at most the
+        tasks of one in-flight ``push_many`` window, which can only make
+        a later barrier return *early*, never hang."""
         if threading.get_ident() != self._main_ident:
             self._check_main("submit_batch()")
         if self._shutdown:
@@ -329,9 +389,7 @@ class RelicPool:
         if n == 1:
             # Degenerate pool: the whole burst is lane 0's shard, and the
             # seq log is pointless with nothing to order across.
-            lane = self._lanes[0]
-            lane.stats.submitted += k
-            lane._push_flat(flat)
+            self._lanes[0]._push_flat(flat, account=True)
             return
         share, rem = divmod(k, n)
         seq0 = self._seq
@@ -348,14 +406,9 @@ class RelicPool:
                 i -= n
             lane = self._lanes[i]
             start2, stop2 = 2 * pos, 2 * (pos + take)
-            # Shard accounting is committed up front (the lane WILL get
-            # these tasks before submit_batch returns); only the ring
-            # hand-off is deferred when the ring lacks room right now.
-            lane.stats.submitted += take
-            self._runs[i].extend(range(seq0 + pos, seq0 + pos + take))
-            if len(self._runs[i]) >= self._trim_at:
-                self._trim_runs(i)
             pushed = lane._ring.push_many(flat, start2, stop2)
+            if pushed:
+                self._account_window(i, lane, seq0 + pos, pushed // 2)
             if start2 + pushed < stop2:
                 pending.append([i, start2 + pushed, stop2])
             pos += take
@@ -363,24 +416,52 @@ class RelicPool:
         # +1 shards (and the next single submit) land on fresh lanes.
         self._rr = (cursor + rem) % n
         if pending:
-            self._sweep_remainders(flat, pending)
+            self._sweep_remainders(flat, pending, seq0)
 
-    def _sweep_remainders(self, flat: list, pending: List[list]) -> None:
+    def _account_window(self, i: int, lane: Relic, seq_start: int,
+                        p: int) -> None:
+        """Record ``p`` tasks just pushed into lane ``i``'s *primary* ring,
+        holding seqs ``seq_start..seq_start+p-1``. Called immediately after
+        the push (never before — interrupt safety, see submit_batch)."""
+        lane.stats.submitted += p
+        runs = self._runs[i]
+        runs.extend(range(seq_start, seq_start + p))
+        if len(runs) >= self._trim_at:
+            self._trim_runs(i)
+
+    def _account_handoff_window(self, i: int, lane: Relic, seq_start: int,
+                                p: int) -> None:
+        """Same as ``_account_window`` for lane ``i``'s *handoff* ring."""
+        lane.stats.submitted += p
+        oruns = self._oruns[i]
+        oruns.extend(range(seq_start, seq_start + p))
+        if len(oruns) >= self._trim_at:
+            self._trim_oruns(i)
+
+    def _sweep_remainders(self, flat: list, pending: List[list],
+                          seq0: int) -> None:
         """Phase 2 of a burst: drain shard remainders into their lanes,
         sweeping all of them each iteration (never committing to one full
         lane) and yielding under full-pool backpressure. Partial pushes
         are always pair-aligned: every publication is even-sized, so the
-        free-slot count every ``push_many`` sees is even by induction."""
+        free-slot count every ``push_many`` sees is even by induction.
+        When a whole sweep makes no progress and rebalancing is on, the
+        stuck remainders are re-striped to lanes with room before the
+        producer resigns itself to spinning."""
         lanes = self._lanes
+        rebalance = self._rebalance
         spins = 0
         pause_every = lanes[0]._spin_pause_every
         while pending:
             progressed = False
             for entry in list(pending):
                 i, next2, stop2 = entry
-                pushed = lanes[i]._ring.push_many(flat, next2, stop2)
+                lane = lanes[i]
+                pushed = lane._ring.push_many(flat, next2, stop2)
                 if pushed:
                     progressed = True
+                    self._account_window(i, lane, seq0 + next2 // 2,
+                                         pushed // 2)
                     next2 += pushed
                     if next2 >= stop2:
                         pending.remove(entry)
@@ -389,6 +470,8 @@ class RelicPool:
             if not pending:
                 return
             if not progressed:
+                if rebalance and self._rebalance_pending(flat, pending, seq0):
+                    continue
                 if spins == 0:
                     # Advisory hints must not deadlock a burst: a parked
                     # assistant is a stalled lane's only possible drain.
@@ -399,25 +482,91 @@ class RelicPool:
                 if spins % pause_every == 0:
                     time.sleep(0)
 
+    def _rebalance_pending(self, flat: list, pending: List[list],
+                           seq0: int) -> bool:
+        """Re-stripe stuck remainders (producer-side dynamic load
+        balancing). For each remainder whose own lane has no room, move a
+        head window to another lane: first into primary rings with free
+        slots, then — when every primary is full — into handoff rings.
+        Returns True when any task moved (the sweep then retries instead
+        of spinning).
+
+        Every push here remains strictly single-producer (this thread is
+        the only pusher of every primary *and* handoff ring) and sized by
+        ``SpscRing.free_slots()``, a producer-side lower bound — so a
+        window never partially pushes and accounting can follow each push
+        exactly. Lanes that themselves have a stuck remainder are skipped
+        as destinations: their rings are full by definition, and skipping
+        them keeps this pass O(lanes) per remainder."""
+        lanes = self._lanes
+        stuck = {entry[0] for entry in pending}
+        order = sorted((j for j in range(self._n) if j not in stuck),
+                       key=lambda j: len(lanes[j]._ring))
+        moved = False
+        for entry in list(pending):
+            i, next2, stop2 = entry
+            for j in order:
+                want = (stop2 - next2) // 2
+                if want <= 0:
+                    break
+                lane = lanes[j]
+                room = lane._ring.free_slots() // 2
+                if room > 0:
+                    m = min(want, room)
+                    pushed = lane._ring.push_many(flat, next2, next2 + 2 * m)
+                    self._account_window(j, lane, seq0 + next2 // 2,
+                                         pushed // 2)
+                    next2 += pushed
+                    entry[1] = next2
+                    moved = True
+                    continue
+                oring = lane._oring
+                if oring is None:
+                    continue
+                room = oring.free_slots() // 2
+                if room <= 0:
+                    continue
+                m = min(want, room)
+                pushed = oring.push_many(flat, next2, next2 + 2 * m)
+                self._account_handoff_window(j, lane, seq0 + next2 // 2,
+                                             pushed // 2)
+                next2 += pushed
+                entry[1] = next2
+                moved = True
+            if next2 >= stop2:
+                pending.remove(entry)
+        return moved
+
     def wait(self) -> None:
         """Barrier across every lane; first-error-wins by submission order.
 
-        Each lane's own ``wait()`` raises that lane's first error; the pool
-        collects them, maps each to its pool-global submission index, and
-        re-raises the earliest-submitted one. All other errors from this
-        window are dropped from the error channel (they remain counted in
-        ``stats.task_errors``) — the same later-failures-only-bump rule the
-        pair applies within one lane."""
+        Each lane is barriered (its spin loop, no raise), its pending
+        first error — if any — is mapped to the pool-global submission
+        seq *while the error state is still set* (the seq logs need the
+        index fields), and only then consumed via ``_take_error`` (which
+        clears the error and its index fields as one unit — the PR 6
+        stale-index bugfix). The earliest-submitted error re-raises; all
+        other errors from this window are dropped from the error channel
+        (they remain counted in ``stats.task_errors``) — the same
+        later-failures-only-bump rule the pair applies within one lane."""
         self._check_main("wait()")
         errors: List[Tuple[int, BaseException]] = []
         for i, lane in enumerate(self._lanes):
-            try:
-                lane.wait()
-            except BaseException as e:
-                errors.append((self._seq_of(i, lane.stats.first_error_index), e))
-        for i, lane in enumerate(self._lanes):
-            self._base[i] = lane.stats.submitted
+            lane._barrier()
+            if lane.stats.last_error is not None:
+                seq = self._pending_error_seq(i, lane.stats)
+                err = lane._take_error()
+                if err is not None:
+                    errors.append((seq, err))
+        for i in range(self._n):
+            # base + len(runs) == tasks ever pushed to that ring: the next
+            # window's local indexes continue from there. (Not the lane's
+            # ``submitted`` — with rebalancing that counter spans both
+            # rings, while each log is per-ring.)
+            self._base[i] += len(self._runs[i])
             self._runs[i].clear()
+            self._obase[i] += len(self._oruns[i])
+            self._oruns[i].clear()
         if errors:
             errors.sort(key=lambda pair: pair[0])
             raise errors[0][1]
@@ -429,13 +578,14 @@ class RelicPool:
         O(1) per task): between barriers the log then stays O(capacity) —
         the in-flight bound — instead of one entry per task ever
         submitted, so fire-and-observe-by-handle consumers that never
-        call ``wait()`` cannot grow it without bound. ``_completed`` is a
-        racy cross-thread read, but it only ever undercounts: trimming
-        too little is safe, and an error recorded at-or-after
-        ``_completed`` is by construction still in the log."""
+        call ``wait()`` cannot grow it without bound. The completion
+        estimate is a racy cross-thread read, but it only ever
+        undercounts (``_completed_main_estimate``): trimming too little
+        is safe, and an error recorded at-or-after it is by construction
+        still in the log."""
         lane = self._lanes[lane_idx]
         base = self._base[lane_idx]
-        keep_from = lane._completed
+        keep_from = lane._completed_main_estimate()
         if lane.stats.last_error is not None:
             fei = lane.stats.first_error_index
             if fei is not None and fei < keep_from:
@@ -445,10 +595,28 @@ class RelicPool:
             del self._runs[lane_idx][:drop]
             self._base[lane_idx] = base + drop
 
+    def _trim_oruns(self, lane_idx: int) -> None:
+        """Handoff-ring twin of ``_trim_runs``: keyed off the lane's
+        handoff-completion counter (monotonic; a stale read undercounts,
+        so over-retention is the only failure mode) and the pending
+        error's handoff index when it rode this ring."""
+        lane = self._lanes[lane_idx]
+        base = self._obase[lane_idx]
+        keep_from = lane._completed_ovf
+        if lane.stats.last_error is not None:
+            fei = lane.stats.first_error_handoff_index
+            if fei is not None and fei < keep_from:
+                keep_from = fei
+        drop = keep_from - base
+        if drop > 0:
+            del self._oruns[lane_idx][:drop]
+            self._obase[lane_idx] = base + drop
+
     def _seq_of(self, lane_idx: int, local_idx: Optional[int]) -> int:
         """Pool-global submission seq of lane ``lane_idx``'s ``local_idx``-th
-        task (this window). Out-of-window indexes (defensive: should not
-        happen — errors are cleared per window) order last."""
+        *primary-ring* task (this window). Out-of-window indexes
+        (defensive: should not happen — errors are cleared per window)
+        order last."""
         if local_idx is None:
             return self._seq
         off = local_idx - self._base[lane_idx]
@@ -462,6 +630,28 @@ class RelicPool:
                 # log between the bounds check and the index. Fall through.
                 pass
         return self._seq
+
+    def _oseq_of(self, lane_idx: int, local_idx: Optional[int]) -> int:
+        """``_seq_of`` for the lane's *handoff* ring (its own log/base)."""
+        if local_idx is None:
+            return self._seq
+        off = local_idx - self._obase[lane_idx]
+        oruns = self._oruns[lane_idx]
+        if 0 <= off < len(oruns):
+            try:
+                return oruns[off]
+            except IndexError:
+                pass                   # racy observer, as in _seq_of
+        return self._seq
+
+    def _pending_error_seq(self, lane_idx: int, stats: RelicStats) -> int:
+        """Submission seq of a lane's pending first error, whichever ring
+        carried the failed task (exactly one index field is set while
+        ``last_error`` is pending)."""
+        hidx = stats.first_error_handoff_index
+        if hidx is not None:
+            return self._oseq_of(lane_idx, hidx)
+        return self._seq_of(lane_idx, stats.first_error_index)
 
     # ------------------------------------------------------- hints (broadcast)
 

@@ -378,12 +378,15 @@ class RelicScheduler(_RelicAdapterBase):
         if (self._closed or not self._started
                 or threading.get_ident() != self._owner):
             self._submit_misuse("submit()")
-        self._rstats.submitted += 1
         if kwargs:
             fn = functools.partial(fn, **kwargs)
+        # Account after the hand-off, as Relic.submit does (an interrupt
+        # unwinding the full-ring spin must not strand submitted > pushed).
         if self._push2(fn, args):
+            self._rstats.submitted += 1
             return
         self._relic._push_spin(fn, args)
+        self._rstats.submitted += 1
 
 
 @register_scheduler("relic-pool")
@@ -405,13 +408,22 @@ class RelicPoolScheduler(_RelicAdapterBase):
     Ordering: FIFO holds per lane, not globally (``workers = lanes``);
     callers needing global FIFO use a ``workers <= 1`` substrate.
     Registered as ``relic-pool`` (``lanes=N`` keyword, default 2) with
-    convenience names ``relic2`` and ``relic4``."""
+    convenience names ``relic2`` and ``relic4``.
+
+    ``rebalance`` (default on, multi-lane only) enables the pool's skew
+    resistance: producer-side re-striping of stuck burst remainders plus
+    per-lane victim-cooperative handoff rings — dynamic load balancing
+    that keeps every ring strictly SPSC (see ``repro.core.relic_pool``
+    and docs/schedulers.md). ``rebalance=False`` is the PR 5 static
+    striping, kept addressable for A/B measurement (the ``skew``
+    benchmark section runs both)."""
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, lanes: int = 2,
-                 start_awake: bool = True):
+                 start_awake: bool = True, rebalance: bool = True):
         super().__init__()
         self._rt = self._pool = RelicPool(lanes=lanes, capacity=capacity,
-                                          start_awake=start_awake)
+                                          start_awake=start_awake,
+                                          rebalance=rebalance)
         # Hot-path pre-bind: the pool's no-checks striped push.
         self._submit2 = self._pool._submit2
         if lanes == 1:
@@ -428,12 +440,13 @@ class RelicPoolScheduler(_RelicAdapterBase):
                 if (self._closed or not self._started
                         or threading.get_ident() != self._owner):
                     self._submit_misuse("submit()")
-                rstats.submitted += 1
                 if kwargs:
                     fn = functools.partial(fn, **kwargs)
                 if push2(fn, args):
+                    rstats.submitted += 1
                     return
                 lane0._push_spin(fn, args)
+                rstats.submitted += 1
 
             self.submit = submit_single    # instance attr shadows the method
 

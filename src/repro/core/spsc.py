@@ -78,6 +78,16 @@ class SpscRing:
     def full(self) -> bool:
         return self._tail - self._head >= self._capacity
 
+    def free_slots(self) -> int:
+        """Producer-side free-slot count: a *lower bound* that a subsequent
+        ``push_many`` of at most this many items is guaranteed to satisfy
+        in full. Reads ``_head`` directly (one cross-thread read — this is
+        a slow-path planning call, not the cached hot path); a stale read
+        only undercounts pops, so the bound never overpromises. RelicPool's
+        re-striping uses it to size a window that must not partially push."""
+        free = self._capacity - (self._tail - self._head)
+        return free if free > 0 else 0
+
     def push(self, item: Any) -> bool:
         """Producer side. Returns False if the ring is full."""
         tail = self._tail

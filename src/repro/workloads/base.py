@@ -26,6 +26,13 @@ Results are checked two ways by :meth:`Workload.check`: all instances
 must agree with instance 0 (they run identical inputs), and instance 0
 must pass the subclass's independent oracle (``check_one``, NumPy/stdlib
 reference implementations — never the JAX kernel under test).
+
+Every workload also carries a *skewed cost* dimension (``skew=alpha``,
+``skew_seed``): per-instance power-law repeat counts that model the
+irregular task costs where static lane striping loses to dynamic load
+balancing (the ``skew`` benchmark section / RelicPool rebalancing). A
+skewed run returns the same results and passes the same oracle — only
+the cost profile changes.
 """
 
 from __future__ import annotations
@@ -122,13 +129,37 @@ class Workload:
     name: str = ""
     default_instances: int = 2
 
-    def __init__(self, n_instances: Optional[int] = None):
+    def __init__(self, n_instances: Optional[int] = None, *,
+                 skew: Optional[float] = None, skew_seed: int = 0):
         n = self.default_instances if n_instances is None else n_instances
         if n < 2:
             raise ValueError(
                 f"workload {self.name!r} needs >= 2 instances for the "
                 f"paired variant, got {n}")
         self.n_instances = n
+        # Skewed task-cost dimension (PR 6): with ``skew=alpha`` each
+        # instance's blocking task repeats its kernel ``repeats[i]`` times,
+        # where the repeat counts follow a Zipf-by-rank power law — the
+        # rank-r instance costs ~ r**-alpha of the heaviest, scaled so the
+        # heaviest repeats ``n`` times and every instance repeats at least
+        # once. Which *position* gets which rank is a seeded shuffle
+        # (``skew_seed``), so the cost profile is deterministic per seed
+        # but not correlated with submission order. Results are unchanged
+        # (the kernel is idempotent on its own input copy), so the oracle
+        # and cross-instance agreement checks apply as-is — a skewed run
+        # is still fully checked. Subclasses never override __init__, so
+        # every registered workload gains the dimension uniformly.
+        self.skew = skew
+        self.skew_seed = skew_seed
+        if skew is None:
+            self.repeats: List[int] = [1] * n
+        else:
+            if not (skew > 0):
+                raise ValueError(f"skew must be a positive exponent, got {skew}")
+            ranks = np.arange(1, n + 1, dtype=np.float64)
+            reps = np.maximum(1, np.rint(n / ranks ** skew)).astype(np.int64)
+            np.random.default_rng(skew_seed).shuffle(reps)
+            self.repeats = [int(r) for r in reps]
         self._dispatches: Optional[List[Callable[[], Any]]] = None
         self._tasks: Optional[List[Callable[[], Any]]] = None
         self._fused: Optional[Callable[[], Any]] = None
@@ -175,19 +206,31 @@ class Workload:
 
     @property
     def tasks(self) -> List[Callable[[], Any]]:
-        """Blocking task closures: ``dispatch`` + ``block_until_ready``."""
+        """Blocking task closures: ``dispatch`` + ``block_until_ready``,
+        repeated ``repeats[i]`` times under a skewed cost profile (the
+        result is the last repeat's — identical to the first, since each
+        dispatch reruns the same kernel on the instance's own input)."""
         if self._tasks is None:
-            def blocking(dispatch):
-                def task():
-                    return jax.block_until_ready(dispatch())
-                task.__name__ = f"{self.name}-instance"
+            def blocking(dispatch, reps):
+                if reps == 1:
+                    def task():
+                        return jax.block_until_ready(dispatch())
+                else:
+                    def task():
+                        for _ in range(reps - 1):
+                            jax.block_until_ready(dispatch())
+                        return jax.block_until_ready(dispatch())
+                task.__name__ = f"{self.name}-instance-x{reps}"
                 return task
 
-            self._tasks = [blocking(d) for d in self.dispatches]
+            self._tasks = [blocking(d, r)
+                           for d, r in zip(self.dispatches, self.repeats)]
         return self._tasks
 
     def fused_task(self) -> Callable[[], Any]:
-        """Blocking thunk for the fused all-instances compiled call."""
+        """Blocking thunk for the fused all-instances compiled call.
+        Note: the fused variant ignores ``skew`` — one vmapped call has no
+        per-instance cost knob; it exists to benchmark the uniform case."""
         if self._fused is None:
             fused = self._build_fused()
             if fused is None:
@@ -262,4 +305,6 @@ class Workload:
             raise WorkloadOracleError(f"{self.name}: oracle failed: {e}") from e
 
     def __repr__(self) -> str:
-        return f"{type(self).__name__}(name={self.name!r}, n={self.n_instances})"
+        skew = "" if self.skew is None else f", skew={self.skew}"
+        return (f"{type(self).__name__}(name={self.name!r}, "
+                f"n={self.n_instances}{skew})")

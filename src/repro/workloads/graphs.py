@@ -5,7 +5,10 @@ paper's input (the 32-node Kronecker graph), one private copy per instance
 — the paper generates two identical graphs so the paired tasks never share
 buffers. Oracles are independent pure-NumPy/Python reimplementations
 (BFS frontier walk, DFS components, Brandes, Bellman-Ford, power
-iteration), never the kernel under test.
+iteration), never the kernel under test. All six inherit the skewed
+power-law cost dimension (``skew=``/``skew_seed=``) from
+:class:`repro.workloads.base.Workload` — the irregular-cost profile the
+RelicPool rebalancing benchmark (``--only skew``) measures against.
 """
 
 from __future__ import annotations

@@ -5,6 +5,9 @@ scatter-add shape (simdjson/DB-filter adjacent) that complements the
 matvec-shaped graph kernels and the scan-shaped JSON parse, and another
 µs-scale body in the paper's task-size regime. The oracle is
 ``np.bincount`` on the same bytes.
+
+Like every workload, inherits the skewed power-law cost dimension
+(``skew=``/``skew_seed=``) from :class:`repro.workloads.base.Workload`.
 """
 
 from __future__ import annotations

@@ -5,6 +5,9 @@ simdjson-stage-1 translation) on its own copy of the json.org "widget"
 document. The oracle cross-checks against
 :func:`repro.tasks.jsonparse.oracle_counts` — Python's ``json`` module
 plus a character walk, fully independent of the JAX kernel.
+
+Like every workload, inherits the skewed power-law cost dimension
+(``skew=``/``skew_seed=``) from :class:`repro.workloads.base.Workload`.
 """
 
 from __future__ import annotations

@@ -5,6 +5,9 @@ Dirichlet (frozen) boundaries — the classic fine-grained HPC loop nest the
 worksharing-task line of work (Maroñas et al., 2020) targets, and µs-scale
 on this input, matching the paper's 0.4–6.4 µs task-size regime. The
 oracle is a NumPy reimplementation of the same sweep.
+
+Like every workload, inherits the skewed power-law cost dimension
+(``skew=``/``skew_seed=``) from :class:`repro.workloads.base.Workload`.
 """
 
 from __future__ import annotations

@@ -459,3 +459,63 @@ def test_relic_backpressure_capacity():
         rt.wait()
     assert out == list(range(100))
     assert rt.stats.submitted == rt.stats.completed == 100
+
+
+def test_relic_wait_clears_error_index_with_the_error():
+    """PR 6 bugfix regression: ``wait()`` used to clear ``last_error`` but
+    leave ``stats.first_error_index`` stale, so the next window's error
+    could be ordered against a dead index (the pool maps these indexes to
+    pool-global submission seqs — a stale one mis-orders cross-lane
+    first-error-wins). Both fields are one unit: they clear together."""
+    with Relic(start_awake=True) as rt:
+        rt.submit(lambda: None)
+        rt.submit(lambda: (_ for _ in ()).throw(KeyError("w1")))
+        with pytest.raises(KeyError, match="w1"):
+            rt.wait()
+        assert rt.stats.last_error is None
+        assert rt.stats.first_error_index is None      # pre-fix: stale 1
+        assert rt.stats.first_error_handoff_index is None
+        # A fresh window's first failure gets a fresh index.
+        rt.submit(lambda: None)
+        rt.submit(lambda: None)
+        rt.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            rt.wait()
+        assert rt.stats.first_error_index is None
+        assert rt.stats.task_errors == 2
+
+
+def test_relic_submit_accounts_only_after_the_push_lands(monkeypatch):
+    """Interrupt safety on the pair: ``submitted`` commits after the ring
+    accepts the task, so a BaseException unwinding out of a full-ring
+    spin leaves ``submitted`` == tasks actually delivered and the next
+    ``wait()`` terminates instead of spinning for a phantom task."""
+    import repro.core.relic as relic_mod
+
+    class _RaisingTime:
+        def __init__(self):
+            self.fired = False
+        def sleep(self, seconds):
+            if not self.fired:
+                self.fired = True
+                raise KeyboardInterrupt
+        def __getattr__(self, name):
+            return getattr(time, name)
+
+    monkeypatch.setenv("RELIC_SPIN_PAUSE_EVERY", "1")
+    gate = threading.Event()
+    fake = _RaisingTime()
+    with Relic(capacity=1, start_awake=True) as rt:
+        popped = threading.Event()
+        rt.submit(lambda: (popped.set(), gate.wait()))
+        assert popped.wait(5)
+        rt.submit(lambda: None)            # fills the 1-slot ring
+        monkeypatch.setattr(relic_mod, "time", fake)
+        with pytest.raises(KeyboardInterrupt):
+            rt.submit(lambda: None)        # full ring -> spin -> interrupt
+        assert fake.fired
+        monkeypatch.setattr(relic_mod, "time", time)
+        assert rt.stats.submitted == 2     # the un-pushed task is NOT counted
+        gate.set()
+        rt.wait()                          # terminates: no phantom task
+        assert rt.stats.completed == 2

@@ -13,7 +13,7 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core.schedulers import available_schedulers
+from repro.core.schedulers import available_schedulers, make_scheduler
 from repro.tasks import jsonparse
 from repro.tasks.api import TaskScope
 from repro.workloads import (PAPER_WORKLOADS, VARIANTS, WorkloadOracleError,
@@ -286,3 +286,72 @@ def test_compare_gate_fails_closed(tmp_path, capsys):
     bad.write_text("{}")
     with pytest.raises(SystemExit):
         load_baseline(str(bad))
+
+
+# ------------------------------------------------- skewed task costs (PR 6)
+
+_SKEW_CACHE = {}
+
+
+def skewed(name, n_instances=4, skew=1.0, skew_seed=0):
+    key = (name, n_instances, skew, skew_seed)
+    if key not in _SKEW_CACHE:
+        _SKEW_CACHE[key] = make_workload(
+            name, n_instances=n_instances, skew=skew, skew_seed=skew_seed)
+    return _SKEW_CACHE[key]
+
+
+def test_skew_repeats_follow_a_seeded_power_law():
+    """The cost profile is Zipf-by-rank (heaviest repeats n, rank r costs
+    ~r**-alpha of it, floor 1), its placement is a seeded shuffle, and the
+    whole thing is deterministic per (skew, seed)."""
+    w = skewed("histogram", n_instances=8, skew=1.0, skew_seed=0)
+    assert sorted(w.repeats, reverse=True) == [8, 4, 3, 2, 2, 1, 1, 1]
+    again = make_workload("histogram", n_instances=8, skew=1.0, skew_seed=0)
+    assert again.repeats == w.repeats                  # deterministic
+    other = make_workload("histogram", n_instances=8, skew=1.0, skew_seed=7)
+    assert sorted(other.repeats) == sorted(w.repeats)  # same multiset...
+    assert other.repeats != w.repeats                  # ...different layout
+    heavier = make_workload("histogram", n_instances=8, skew=2.0)
+    assert max(heavier.repeats) == 8
+    assert sum(heavier.repeats) < sum(w.repeats)       # steeper tail decay
+    flat = make_workload("histogram", n_instances=8)
+    assert flat.repeats == [1] * 8                     # skew=None: uniform
+    assert "skew" in repr(w) and "skew" not in repr(flat)
+    with pytest.raises(ValueError, match="positive exponent"):
+        make_workload("histogram", n_instances=8, skew=0.0)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_skewed_serial_passes_oracle(name):
+    """Skew changes the cost profile, never the results: every workload's
+    skewed run must pass the same oracle as the uniform one."""
+    w = skewed(name)
+    assert max(w.repeats) == 4 and min(w.repeats) == 1
+    w.check(w.serial())
+
+
+@pytest.mark.parametrize("lanes", [1, 2, 4])
+@pytest.mark.parametrize("name", ALL)
+def test_skewed_chunked_passes_oracle_at_every_lane_count(name, lanes):
+    """The benchmark's skew section shape: chunked execution of a skewed
+    workload over a RelicPool, oracle-checked at lanes 1/2/4 (lanes >= 2
+    exercises the rebalancing machinery end-to-end under real kernels)."""
+    w = skewed(name)
+    serial = w.serial()
+    with TaskScope(make_scheduler("relic-pool", lanes=lanes)) as scope:
+        chunked = w.chunked(scope, grain=1)
+    w.check(chunked)
+    assert all(results_agree(s, c) for s, c in zip(serial, chunked))
+
+
+def test_skewed_chunked_static_striping_matches_rebalanced():
+    """A/B integrity for the benchmark: rebalance=False (the PR 5 static
+    pool) must produce identical results on the same skewed workload."""
+    w = skewed("stencil")
+    serial = w.serial()
+    with TaskScope(make_scheduler("relic-pool", lanes=2,
+                                  rebalance=False)) as scope:
+        chunked = w.chunked(scope, grain=1)
+    w.check(chunked)
+    assert all(results_agree(s, c) for s, c in zip(serial, chunked))
