@@ -643,7 +643,112 @@ def compare_against(em: Emitter, baseline: dict, tol: float,
     return compared, regressions
 
 
-def run_roofline(em: Emitter):
+def run_serve(iters: int, em: Emitter):
+    """Latency under load: the ``repro.serve`` subsystem measured as
+    latency percentiles + throughput vs offered load.
+
+    For each workload × lanes 1/2/4, three load points:
+
+    * ``closed`` — 2 closed-loop clients (submit → wait → repeat, block
+      admission): best-case latency and the saturation throughput that
+      anchors the open-loop rates.
+    * ``open50`` / ``open90`` — one open-loop client on a seeded Poisson
+      schedule at 50% / 90% of the measured closed-loop throughput
+      (reject admission, so overload is counted, not silently queued),
+      with a generous deadline so SLO-miss accounting is exercised.
+
+    Served work is drawn from the oracle-checked ``repro.workloads``
+    registry and **every** completed response's value is verified with the
+    workload's ``check_one`` oracle before the point's numbers are
+    emitted — ``oracle=ok`` in the derived column means every latency
+    sample comes from a correct response. Percentiles are the subsystem's
+    own nearest-rank implementation (pinned against numpy by
+    tests/test_serve.py). Rows carry no ``speedup=`` field: latency-vs-load
+    is a new axis, gated by its own floors, not by speedup-over-serial.
+    """
+    from repro.runtime.config import resolve_serve_config
+    from repro.serve import (
+        STATUS_OK, ServeScheduler, percentiles, run_closed_loop,
+        run_open_loop)
+    from repro.workloads import make_workload
+
+    lane_counts = [1, 2, 4]
+    wl_names = ("histogram", "json")
+    per_client = max(iters // 10, 15)      # closed-loop requests per client
+    clients = 2
+    n_open = max(iters // 5, 30)           # open-loop requests per point
+    deadline_s = 0.25                      # generous: exercised, rarely missed
+
+    def check_all(w, responses):
+        """Oracle-check every completed-ok response; returns (ok, missed)."""
+        ok = missed = 0
+        for resp in responses:
+            if resp.status == STATUS_OK:
+                w.check_one(resp.value)
+                ok += 1
+            elif resp.status == "deadline_exceeded":
+                missed += 1
+            else:
+                raise AssertionError(
+                    f"serve bench response ended {resp.status}: {resp.error}")
+        return ok, missed
+
+    def latency_derived(responses):
+        lats = [r.latency for r in responses if r.latency is not None]
+        p = percentiles(lats)
+        return p, (f"p50={p[50] * 1e6:.0f}us;p95={p[95] * 1e6:.0f}us;"
+                   f"p99={p[99] * 1e6:.0f}us")
+
+    em.header("serve: latency percentiles + throughput vs offered load "
+              f"(closed {clients}x{per_client} reqs, open {n_open} reqs "
+              "at 50%/90% of closed tput; every response oracle-checked)")
+    for wname in wl_names:
+        w = make_workload(wname)
+        w.check(w.serial())                # builds, warms, verifies oracle
+        tasks = w.tasks
+        idx = [0]
+
+        def work(tasks=tasks, idx=idx):
+            fn = tasks[idx[0] % len(tasks)]
+            idx[0] += 1
+            return fn, ()
+
+        for lanes in lane_counts:
+            # Closed loop: block admission, no deadline — saturation point.
+            cfg = resolve_serve_config(admission="block")
+            with ServeScheduler(lanes=lanes, config=cfg) as server:
+                res = run_closed_loop(
+                    server, work, clients=clients,
+                    requests_per_client=per_client)
+                ok, _ = check_all(w, res.responses)
+                stats = server.stats()
+            tput = stats["throughput_rps"]
+            p, derived = latency_derived(res.responses)
+            em.row(f"serve/{wname}/lanes{lanes}/closed", p[50] * 1e6,
+                   f"{derived};tput_rps={tput:.0f};n={ok};oracle=ok")
+
+            # Open loop at 50% and 90% of the measured closed throughput:
+            # reject admission + deadline, seeded Poisson schedule.
+            for tag, frac in (("open50", 0.5), ("open90", 0.9)):
+                rate = max(tput * frac, 1.0)
+                cfg = resolve_serve_config(admission="reject")
+                with ServeScheduler(lanes=lanes, config=cfg) as server:
+                    res = run_open_loop(
+                        server, work, rate_rps=rate, n_requests=n_open,
+                        seed=lanes * 100 + int(frac * 100),
+                        deadline_s=deadline_s)
+                    ok, missed = check_all(w, res.responses)
+                    stats = server.stats()
+                p, derived = latency_derived(res.responses)
+                em.row(
+                    f"serve/{wname}/lanes{lanes}/{tag}", p[50] * 1e6,
+                    f"{derived};offered_rps={rate:.0f};"
+                    f"tput_rps={stats['throughput_rps']:.0f};n={ok};"
+                    f"slo_miss={missed};rejected={res.rejected};oracle=ok")
+
+
+def run_roofline(iters: int, em: Emitter):
+    del iters  # summary of recorded artifacts; nothing to measure
     from benchmarks.roofline import load_records
 
     recs = load_records()
@@ -662,11 +767,25 @@ def run_roofline(em: Emitter):
                f"dominant={dom};ratio={r.get('useful_flops_ratio') or 0:.3f}")
 
 
-SECTIONS = ["fig1", "spsc", "wavefront", "grain", "paper", "scaling",
-            "skew", "roofline"]
+# The section registry: name -> runner, every runner ``fn(iters, em)``.
+# This dict is THE source of truth for --only/--list-sections, and
+# tests/test_serve.py tripwires it against the module's run_* functions so
+# a new section cannot be added without being reachable from the CLI.
+SECTION_RUNNERS = {
+    "fig1": run_figures,
+    "spsc": run_spsc,
+    "wavefront": run_wavefront,
+    "grain": run_grain,
+    "paper": run_paper,
+    "scaling": run_scaling,
+    "skew": run_skew,
+    "serve": run_serve,
+    "roofline": run_roofline,
+}
+SECTIONS = list(SECTION_RUNNERS)
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--only", default="all",
@@ -693,7 +812,13 @@ def main() -> None:
                     help="extra annotation recorded under meta.notes in the "
                          "--json payload (repeatable), e.g. baselines from "
                          "an earlier PR measured on the same host")
-    args = ap.parse_args()
+    ap.add_argument("--list-sections", action="store_true",
+                    help="print the known section names and exit")
+    args = ap.parse_args(argv)
+    if args.list_sections:
+        for name in SECTIONS:
+            print(name)
+        raise SystemExit(0)
     selected = (set(SECTIONS) if args.only == "all"
                 else {s.strip() for s in args.only.split(",") if s.strip()})
     unknown = selected - set(SECTIONS)
@@ -706,22 +831,9 @@ def main() -> None:
     baseline = load_baseline(args.compare) if args.compare else None
     em = Emitter()
     t0 = time.time()
-    if "fig1" in selected:
-        run_figures(args.iters, em)
-    if "spsc" in selected:
-        run_spsc(args.iters, em)
-    if "wavefront" in selected:
-        run_wavefront(args.iters, em)
-    if "grain" in selected:
-        run_grain(args.iters, em)
-    if "paper" in selected:
-        run_paper(args.iters, em)
-    if "scaling" in selected:
-        run_scaling(args.iters, em)
-    if "skew" in selected:
-        run_skew(args.iters, em)
-    if "roofline" in selected:
-        run_roofline(em)
+    for name, runner in SECTION_RUNNERS.items():
+        if name in selected:
+            runner(args.iters, em)
     total = time.time() - t0
     print(f"# total {total:.1f}s")
     compared = regressions = None
@@ -732,13 +844,15 @@ def main() -> None:
     if args.json:
         import os
 
-        from repro.core.relic import resolve_spin_pause_every
+        from repro.runtime.config import (
+            resolve_serve_config, resolve_spin_pause_every)
 
         # Host fingerprint: spin cadence + cpu_count + Python version
         # determine the spin/yield regime, so BENCH files are only
         # comparable across runs when these match. The cadence is the
         # per-instance resolution (RELIC_SPIN_PAUSE_EVERY aware), i.e.
-        # what the substrates in this run actually used.
+        # what the substrates in this run actually used; ``serve`` is the
+        # same per-instance resolution of the RELIC_SERVE_* knobs.
         meta = {
             "iters": args.iters, "only": args.only,
             "total_s": round(total, 1),
@@ -746,6 +860,7 @@ def main() -> None:
             "python": sys.version.split()[0],
             "cpu_count": os.cpu_count(),
             "spin_pause_every": resolve_spin_pause_every(),
+            "serve": resolve_serve_config().asdict(),
         }
         for kv in args.meta:
             key, _, val = kv.partition("=")

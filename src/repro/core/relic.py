@@ -27,7 +27,6 @@ exist precisely because the rest of the application is serial.
 from __future__ import annotations
 
 import functools
-import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -86,42 +85,12 @@ class RelicStats:
     first_error_handoff_index: Optional[int] = None
 
 
-def _default_spin_yield() -> int:
-    """`pause`-cadence adaptation: the paper assumes two hardware contexts
-    (SMT, §VI) — producer + assistant fit exactly one SMT core. Yield hot
-    (every iteration) only when the two runtime threads actually outnumber
-    the host's contexts, i.e. on a 1-context host, where spin-waiting
-    starves the partner thread across the GIL. With 2+ contexts — the
-    paper's own target shape included — spin mostly-hot and yield rarely.
-    (The old threshold ``< 2 + 1`` misclassified a 2-context host as
-    oversubscribed, forcing the paper's §VI scenario onto the
-    yield-every-iteration cadence: the PR 6 bugfix.)"""
-    return 1 if (os.cpu_count() or 1) < 2 else 64
-
+# Spin-cadence resolution lives with the other env-var knobs in
+# ``repro.runtime.config``; re-exported here because this module is where
+# callers (tests, benchmarks, docs) historically found it.
+from repro.runtime.config import _default_spin_yield, resolve_spin_pause_every
 
 SPIN_PAUSE_EVERY = _default_spin_yield()
-
-
-def resolve_spin_pause_every() -> int:
-    """The spin/yield cadence for a *new* runtime instance: the
-    ``RELIC_SPIN_PAUSE_EVERY`` env var when set (a positive int), else the
-    cpu-count heuristic. Re-read per ``Relic``/``RelicPool``/worker
-    instance — not frozen at import — so a 2-cpu CI container and a local
-    SMT host can be benchmarked against the same code path by exporting
-    one variable instead of editing the module."""
-    raw = os.environ.get("RELIC_SPIN_PAUSE_EVERY")
-    if raw is None or raw == "":
-        return _default_spin_yield()
-    try:
-        value = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"RELIC_SPIN_PAUSE_EVERY must be a positive int, got {raw!r}"
-        ) from None
-    if value <= 0:
-        raise ValueError(
-            f"RELIC_SPIN_PAUSE_EVERY must be a positive int, got {raw!r}")
-    return value
 
 
 class Relic:

@@ -1,5 +1,15 @@
-"""Serving driver: batched prefill + greedy decode with a fixed-length KV
-cache. Demonstrates the serve_step path the decode dry-run cells lower.
+"""Serving driver: batched scan-prefill + greedy decode, served as a
+streaming request through ``repro.serve.ServeScheduler``.
+
+The demo form of the serving stack (docs/serving.md): the decode loop is a
+*generator* work function — each generated token is one yielded item, so
+the response's ``first_result_t`` is the time-to-first-token and the
+subsystem's latency accounting applies unchanged to token serving.
+
+Prefill is ``make_prefill_step`` — one jitted ``lax.scan`` dispatch over
+the prompt positions instead of O(prompt_len) ``serve_step`` dispatches
+(same teacher-forced single-token math; see the cache-position contract in
+``repro.launch.steps``).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch relic_tiny --smoke \
@@ -9,25 +19,15 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import build_model
-
-
-def prefill_via_decode(model, params, cache, prompts, serve_step):
-    """Feed prompt tokens one-by-one (teacher forcing) to fill the cache."""
-    b, plen = prompts.shape
-    tok = None
-    for t in range(plen):
-        tok, _, cache = serve_step(params, cache,
-                                   prompts[:, t:t + 1], jnp.int32(t))
-    return tok, cache
+from repro.serve import ServeScheduler
 
 
 def main(argv=None):
@@ -37,6 +37,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="RelicPool lanes backing the request server")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -46,6 +48,7 @@ def main(argv=None):
     cache_len = args.prompt_len + args.gen
     cache = model.init_cache(args.batch, cache_len)
     serve_step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+    prefill = jax.jit(make_prefill_step(model), donate_argnums=(1,))
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
@@ -60,21 +63,52 @@ def main(argv=None):
         cache = prefill_cross_cache(cfg, params, cache,
                                     encode(cfg, params, frames))
 
-    tok, cache = prefill_via_decode(model, params, cache, prompts, serve_step)
+    # Warm the decode jit off the served path (its own throwaway cache —
+    # serve_step donates its cache argument), so the served request
+    # measures steady-state steps, not compilation.
+    warm_cache = model.init_cache(args.batch, cache_len)
+    warm_tok = jnp.zeros((args.batch, 1), jnp.int32)
+    jax.block_until_ready(
+        serve_step(params, warm_cache, warm_tok, jnp.int32(0))[0])
 
-    out = [tok]
-    t0 = time.time()
-    for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
-        tok, _, cache = serve_step(params, cache, tok, jnp.int32(t))
-        out.append(tok)
+    tok, cache = prefill(params, cache, prompts)
     jax.block_until_ready(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
+
+    steps_timed = [0]  # decode-loop accounting, asserted against gen below
+
+    def decode_stream(first_tok, dcache):
+        def gen():
+            t_tok = first_tok
+            t_cache = dcache
+            yield first_tok  # the prefill prediction is token 0
+            for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
+                t_tok, _, t_cache = serve_step(
+                    params, t_cache, t_tok, jnp.int32(t))
+                steps_timed[0] += 1
+                yield t_tok
+            jax.block_until_ready(t_tok)
+        return gen()
+
+    with ServeScheduler(lanes=args.lanes) as server:
+        client = server.open_client("decode")
+        resp = client.submit(decode_stream, tok, cache)
+        out = resp.result()
+
+    # Token accounting must match the timed step count: one prefill
+    # prediction + one token per timed decode step.
+    assert steps_timed[0] == args.gen - 1, (steps_timed[0], args.gen)
+    assert len(out) == 1 + steps_timed[0], (len(out), steps_timed[0])
+
+    gen_toks = jnp.concatenate(out, axis=1)
+    assert resp.first_result_t is not None and resp.complete_t is not None
+    ttft = resp.first_result_t - resp.request.arrival_t
+    dt = max(resp.complete_t - resp.first_result_t, 1e-9)
     tps = args.batch * (args.gen - 1) / dt
-    print(f"generated {gen.shape} tokens; {tps:.1f} tok/s "
-          f"({dt/(args.gen-1)*1e3:.1f} ms/step)")
-    print("sample row:", np.asarray(gen[0][:16]))
-    return gen
+    print(f"generated {gen_toks.shape} tokens; {tps:.1f} tok/s "
+          f"({dt / max(args.gen - 1, 1) * 1e3:.1f} ms/step, "
+          f"ttft {ttft * 1e3:.1f} ms, lanes {args.lanes})")
+    print("sample row:", np.asarray(gen_toks[0][:16]))
+    return gen_toks
 
 
 if __name__ == "__main__":

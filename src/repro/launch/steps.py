@@ -99,6 +99,41 @@ def make_serve_step(model: Model):
     return serve_step
 
 
+def make_prefill_step(model: Model):
+    """Teacher-forced prefill in ONE dispatch: ``lax.scan`` of
+    ``decode_step`` over the prompt positions, carrying the cache.
+
+    Cache-position contract: every model family's ``decode_step`` is
+    strictly single-token — ``tokens`` is ``[B, 1]`` and ``pos`` is the
+    absolute position of that token, which must advance by exactly 1 per
+    call (attention reads ``kv_len = pos + 1``; SSM/hybrid states shift
+    once per call). Prefill therefore cannot feed a multi-token chunk
+    through ``decode_step``; what it *can* do is move the per-position
+    loop from Python (O(prompt_len) jit dispatches) into a ``lax.scan``
+    (one dispatch, identical per-position math). Pinned equivalent to the
+    one-at-a-time loop by ``tests/test_serve.py``.
+
+    Returns ``prefill(params, cache, prompts[B, P]) -> (next_tokens[B, 1],
+    cache)`` where ``next_tokens`` is the greedy prediction after the full
+    prompt — exactly what the first decode step consumes.
+    """
+
+    def prefill(params, cache, prompts):
+        toks = jnp.swapaxes(prompts, 0, 1)[:, :, None]        # [P, B, 1]
+        positions = jnp.arange(prompts.shape[1], dtype=jnp.int32)
+
+        def body(cache, xs):
+            tok, pos = xs
+            logits, cache = model.decode_step(params, cache, tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return cache, nxt
+
+        cache, nxts = jax.lax.scan(body, cache, (toks, positions))
+        return nxts[-1], cache
+
+    return prefill
+
+
 def abstract_serve_state(model: Model, shape: ShapeConfig):
     """(params_sds, cache_sds) for a decode shape (no allocation)."""
     cfg = model.cfg

@@ -1,0 +1,141 @@
+"""Central resolver for env-var runtime knobs (alpa ``global_env.py`` shape).
+
+Every tunable that the runtime reads from the environment lives here, in one
+place, with one discipline: knobs are **re-read per instance** (a new
+``Relic``/``RelicPool``/``ServeScheduler`` picks up the current environment),
+never frozen at import time, so a CI container and a local SMT host can run
+the same code path by exporting a variable instead of editing a module.
+
+Two families:
+
+``RELIC_SPIN_PAUSE_EVERY``
+    The spin/yield cadence for the busy-wait loops (paper §VI-B). Moved here
+    from ``repro.core.relic`` (which still re-exports it for back-compat).
+
+``RELIC_SERVE_*``
+    Knobs for the ``repro.serve`` request-serving subsystem:
+
+    - ``RELIC_SERVE_ADMISSION``: ``block`` (default) or ``reject`` — what a
+      client submit does when its SPSC request ring is full.
+    - ``RELIC_SERVE_QUEUE_DEPTH``: per-client request-ring capacity
+      (default 64).
+    - ``RELIC_SERVE_BATCH_MAX``: max in-flight requests the continuous
+      batcher keeps admitted at once (default 8).
+    - ``RELIC_SERVE_DEADLINE_MS``: default per-request deadline in
+      milliseconds; unset/empty means no deadline.
+
+``resolve_serve_config()`` returns a frozen snapshot recorded in BENCH meta
+alongside the spin cadence, so a recorded run's knob state is reproducible.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+
+def _default_spin_yield() -> int:
+    """`pause`-cadence adaptation: the paper assumes two hardware contexts
+    (SMT, §VI) — producer + assistant fit exactly one SMT core. Yield hot
+    (every iteration) only when the two runtime threads actually outnumber
+    the host's contexts, i.e. on a 1-context host, where spin-waiting
+    starves the partner thread across the GIL. With 2+ contexts — the
+    paper's own target shape included — spin mostly-hot and yield rarely.
+    (The old threshold ``< 2 + 1`` misclassified a 2-context host as
+    oversubscribed, forcing the paper's §VI scenario onto the
+    yield-every-iteration cadence: the PR 6 bugfix.)"""
+    return 1 if (os.cpu_count() or 1) < 2 else 64
+
+
+def _positive_int(name: str, raw: str) -> int:
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be a positive int, got {raw!r}") from None
+    if value <= 0:
+        raise ValueError(f"{name} must be a positive int, got {raw!r}")
+    return value
+
+
+def resolve_spin_pause_every() -> int:
+    """The spin/yield cadence for a *new* runtime instance: the
+    ``RELIC_SPIN_PAUSE_EVERY`` env var when set (a positive int), else the
+    cpu-count heuristic. Re-read per ``Relic``/``RelicPool``/worker
+    instance — not frozen at import — so a 2-cpu CI container and a local
+    SMT host can be benchmarked against the same code path by exporting
+    one variable instead of editing the module."""
+    raw = os.environ.get("RELIC_SPIN_PAUSE_EVERY")
+    if raw is None or raw == "":
+        return _default_spin_yield()
+    return _positive_int("RELIC_SPIN_PAUSE_EVERY", raw)
+
+
+_ADMISSION_POLICIES = ("block", "reject")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Resolved ``RELIC_SERVE_*`` knob snapshot for one serving instance."""
+
+    admission: str = "block"
+    queue_depth: int = 64
+    batch_max: int = 8
+    deadline_ms: Optional[float] = None
+
+    def asdict(self) -> dict:
+        return asdict(self)
+
+
+def resolve_serve_config(
+    *,
+    admission: Optional[str] = None,
+    queue_depth: Optional[int] = None,
+    batch_max: Optional[int] = None,
+    deadline_ms: Optional[float] = None,
+) -> ServeConfig:
+    """Resolve the serving knobs for a *new* ``ServeScheduler``/``Ingest``.
+
+    Explicit keyword arguments (from code or CLI flags) win over the
+    environment; the environment wins over the defaults. Like
+    ``resolve_spin_pause_every`` this is re-read per instance.
+    """
+    if admission is None:
+        raw = os.environ.get("RELIC_SERVE_ADMISSION")
+        admission = raw if raw else "block"
+    if admission not in _ADMISSION_POLICIES:
+        raise ValueError(
+            "RELIC_SERVE_ADMISSION must be one of "
+            f"{_ADMISSION_POLICIES}, got {admission!r}")
+
+    if queue_depth is None:
+        raw = os.environ.get("RELIC_SERVE_QUEUE_DEPTH")
+        queue_depth = _positive_int(
+            "RELIC_SERVE_QUEUE_DEPTH", raw) if raw else 64
+
+    if batch_max is None:
+        raw = os.environ.get("RELIC_SERVE_BATCH_MAX")
+        batch_max = _positive_int(
+            "RELIC_SERVE_BATCH_MAX", raw) if raw else 8
+
+    if deadline_ms is None:
+        raw = os.environ.get("RELIC_SERVE_DEADLINE_MS")
+        if raw:
+            try:
+                deadline_ms = float(raw)
+            except ValueError:
+                raise ValueError(
+                    "RELIC_SERVE_DEADLINE_MS must be a positive number, "
+                    f"got {raw!r}") from None
+    if deadline_ms is not None and deadline_ms <= 0:
+        raise ValueError(
+            "RELIC_SERVE_DEADLINE_MS must be a positive number, "
+            f"got {deadline_ms!r}")
+
+    return ServeConfig(
+        admission=admission,
+        queue_depth=queue_depth,
+        batch_max=batch_max,
+        deadline_ms=deadline_ms,
+    )

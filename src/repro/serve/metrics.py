@@ -1,0 +1,200 @@
+"""Streaming latency/throughput accounting for the serving subsystem.
+
+Single-writer discipline mirrors ``RelicStats``/``RelicPoolStats``: every
+mutator is called from exactly one thread (the scheduler loop), readers take
+racy-but-monotonic snapshots from any thread. Percentiles use the
+**nearest-rank** definition (rank ``ceil(q/100 * n)``, 1-based into the
+sorted sample) — the classical textbook estimator, equal to
+``numpy.percentile(..., method="inverted_cdf")``, pinned against it by
+``tests/test_serve.py`` on adversarial sizes (n=1, n=2, ties, all-equal).
+Nearest-rank always returns an *observed* sample, which is what an SLO
+report wants: "p99 = 4.1 ms" names a request that actually took 4.1 ms,
+not an interpolation between two that didn't.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+def nearest_rank(sorted_values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted non-empty sample.
+
+    ``q`` in (0, 100]. Rank is ``ceil(q/100 * n)`` (1-based); q=0 is mapped
+    to rank 1 so ``nearest_rank(xs, 0) == min(xs)``.
+    """
+    n = len(sorted_values)
+    if n == 0:
+        raise ValueError("nearest_rank of an empty sample")
+    if not 0 <= q <= 100:
+        raise ValueError(f"percentile must be in [0, 100], got {q!r}")
+    rank = max(1, math.ceil(q / 100.0 * n))
+    return sorted_values[rank - 1]
+
+
+def percentiles(
+    values: Sequence[float], qs: Sequence[float] = (50, 95, 99)
+) -> Dict[float, float]:
+    """Nearest-rank percentiles of an (unsorted) non-empty sample."""
+    ordered = sorted(values)
+    return {q: nearest_rank(ordered, q) for q in qs}
+
+
+class LatencySeries:
+    """Append-only latency sample series (seconds). Single writer; readers
+    call ``snapshot()`` which copies before sorting so the writer is never
+    blocked and a concurrent append can at worst be missed, not torn."""
+
+    __slots__ = ("_values",)
+
+    def __init__(self) -> None:
+        self._values: List[float] = []
+
+    def add(self, value: float) -> None:
+        self._values.append(value)
+
+    def __len__(self) -> int:
+        return len(self._values)
+
+    def snapshot(self) -> List[float]:
+        return list(self._values)
+
+    def percentiles(
+        self, qs: Sequence[float] = (50, 95, 99)
+    ) -> Dict[float, float]:
+        return percentiles(self.snapshot(), qs)
+
+
+@dataclass
+class Gauge:
+    """Last/min/max/mean of a sampled quantity (queue depth, batch
+    occupancy). Single writer; ``mean`` is total/samples."""
+
+    last: float = 0.0
+    min: float = math.inf
+    max: float = -math.inf
+    total: float = 0.0
+    samples: int = 0
+
+    def observe(self, value: float) -> None:
+        self.last = value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+        self.total += value
+        self.samples += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.samples if self.samples else 0.0
+
+    def asdict(self) -> dict:
+        if not self.samples:
+            return {"last": 0.0, "min": 0.0, "max": 0.0, "mean": 0.0}
+        return {
+            "last": self.last, "min": self.min,
+            "max": self.max, "mean": self.mean,
+        }
+
+
+@dataclass
+class ServeMetrics:
+    """Live counters + series for one ``ServeScheduler`` instance.
+
+    All mutators run on the scheduler loop thread except ``note_rejected``
+    (incremented per *client* on the client's own thread inside
+    ``ClientHandle``, summed here at snapshot time — no shared counter on
+    the submit hot path).
+    """
+
+    completed: int = 0          # responses finished, any status
+    ok: int = 0
+    errors: int = 0
+    deadline_exceeded: int = 0  # ran (or was shed) past its deadline
+    cancelled: int = 0          # still queued/in-flight at stop()
+    admitted: int = 0
+
+    queue_depth: Gauge = field(default_factory=Gauge)
+    batch_occupancy: Gauge = field(default_factory=Gauge)
+
+    latency: LatencySeries = field(default_factory=LatencySeries)
+    queue_delay: LatencySeries = field(default_factory=LatencySeries)
+    ttfr: LatencySeries = field(default_factory=LatencySeries)  # first result
+
+    first_arrival_t: Optional[float] = None
+    last_complete_t: Optional[float] = None
+
+    def note_arrival(self, t: float) -> None:
+        if self.first_arrival_t is None or t < self.first_arrival_t:
+            self.first_arrival_t = t
+
+    def note_complete(self, resp) -> None:
+        """Fold a finished Response into the counters (loop thread only)."""
+        self.completed += 1
+        status = resp.status
+        if status == "ok":
+            self.ok += 1
+        elif status == "error":
+            self.errors += 1
+        elif status == "deadline_exceeded":
+            self.deadline_exceeded += 1
+        else:
+            self.cancelled += 1
+        req = resp.request
+        self.note_arrival(req.arrival_t)
+        t = resp.complete_t
+        if t is not None:
+            if self.last_complete_t is None or t > self.last_complete_t:
+                self.last_complete_t = t
+            self.latency.add(t - req.arrival_t)
+        if req.admit_t is not None:
+            self.queue_delay.add(req.admit_t - req.arrival_t)
+        if resp.first_result_t is not None:
+            self.ttfr.add(resp.first_result_t - req.arrival_t)
+
+    @property
+    def throughput(self) -> float:
+        """Completed requests per second over the observed span."""
+        if (
+            self.first_arrival_t is None
+            or self.last_complete_t is None
+            or self.last_complete_t <= self.first_arrival_t
+        ):
+            return 0.0
+        return self.completed / (self.last_complete_t - self.first_arrival_t)
+
+    def snapshot(self, rejected: int = 0) -> dict:
+        """RelicPoolStats-style live snapshot (racy reads are fine — every
+        field is a single reference/int assignment)."""
+        lat = self.latency.snapshot()
+        out = {
+            "completed": self.completed,
+            "ok": self.ok,
+            "errors": self.errors,
+            "deadline_exceeded": self.deadline_exceeded,
+            "cancelled": self.cancelled,
+            "admitted": self.admitted,
+            "rejected": rejected,
+            "throughput_rps": self.throughput,
+            "queue_depth": self.queue_depth.asdict(),
+            "batch_occupancy": self.batch_occupancy.asdict(),
+        }
+        if lat:
+            ordered = sorted(lat)
+            out["latency_s"] = {
+                "p50": nearest_rank(ordered, 50),
+                "p95": nearest_rank(ordered, 95),
+                "p99": nearest_rank(ordered, 99),
+                "mean": sum(ordered) / len(ordered),
+                "n": len(ordered),
+            }
+        return out
+
+
+def now() -> float:
+    """The one clock the serving subsystem stamps with (monotonic)."""
+    return time.perf_counter()

@@ -1,0 +1,312 @@
+"""Continuous-batching scheduler loop on the Relic tasking substrate.
+
+The serving shape of the paper's runtime: a single **scheduler loop thread**
+owns a ``RelicPool``-backed scheduler (creates it, submits to it, closes it
+— the pool's owner-thread contract) and runs the admit/dispatch/finalize
+cycle:
+
+1. **finalize** — observe ``Response.done()`` on in-flight requests (the
+   assistant lanes publish via the lazy-Event flag; the loop never blocks
+   on a barrier) and fold finished responses into ``ServeMetrics``;
+2. **admit** — drain client SPSC rings up to the free batch budget
+   (``RELIC_SERVE_BATCH_MAX`` minus in-flight), stamp ``admit_t``, shed
+   requests whose deadline already passed (surfaced as
+   ``deadline_exceeded``, never silently dropped), and submit the rest to
+   the pool lanes via ``submit_many`` (lane striping + rebalance are the
+   existing RelicPool machinery);
+3. **park** — when idle long enough, publish a parked flag and sleep on an
+   Event that ``ClientHandle.submit`` sets only when it observes the flag —
+   the same advisory-hint philosophy as ``Relic.sleep_hint`` /
+   ``wake_up_hint`` (paper §VI-B), so the submit hot path under load never
+   touches the Event.
+
+**Continuous batching** means there is no barrier between "batches": the
+in-flight set is a sliding window. A request admitted while others are
+running completes as soon as a lane finishes it — ``wait()`` is never
+called on the pool while serving (RelicPool's fire-and-observe mode, whose
+per-window error logs stay bounded by ring capacity).
+
+Task errors are contained in ``_execute`` (the Response carries them);
+a failed request never becomes a failed pool task, so the pool's
+first-error-wins machinery stays quiet and serving continues.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Optional
+
+from repro.core.schedulers import make_scheduler
+from repro.runtime.config import (
+    ServeConfig,
+    resolve_serve_config,
+    resolve_spin_pause_every,
+)
+from repro.serve.ingest import ClientHandle, Ingest, ServeUsageError
+from repro.serve.metrics import ServeMetrics, now
+from repro.serve.request import (
+    Response,
+    STATUS_CANCELLED,
+    STATUS_DEADLINE,
+    STATUS_ERROR,
+    STATUS_OK,
+)
+
+# Idle loop iterations (no finalize, no admit) before the loop parks on the
+# wake Event. Large enough that a loaded server never parks; small enough
+# that an idle one stops burning the host within ~a millisecond.
+_PARK_AFTER_IDLE_SPINS = 256
+# Park timeout: an advisory-hint backstop, not the wake mechanism (the
+# Event is); bounds stop() latency if every hint is missed.
+_PARK_TIMEOUT_S = 0.05
+
+
+class ServeScheduler:
+    """Request server: per-client SPSC ingest → continuous batcher → lanes.
+
+    Usage::
+
+        with ServeScheduler(lanes=2) as server:
+            client = server.open_client()
+            resp = client.submit(fn, arg)
+            value = resp.result()
+
+    ``lanes=0`` runs a degenerate inline mode (admit → execute on the loop
+    thread) used for tests that want serving semantics without threads.
+    """
+
+    def __init__(
+        self,
+        lanes: int = 2,
+        capacity: Optional[int] = None,
+        config: Optional[ServeConfig] = None,
+        scheduler: str = "relic-pool",
+    ) -> None:
+        if lanes < 0:
+            raise ValueError(f"lanes must be >= 0, got {lanes}")
+        self.lanes = lanes
+        self._capacity = capacity
+        self._scheduler_name = scheduler
+        self.config = config or resolve_serve_config()
+        self.metrics = ServeMetrics()
+        self._wake_event = threading.Event()
+        self._parked = False
+        self.ingest = Ingest(self.config, wake=self._wake_from_client)
+        self._in_flight: Dict[int, Response] = {}
+        self._stop_requested = False
+        self._drain_on_stop = True
+        self._started = False
+        self._closed = False
+        self._loop_thread: Optional[threading.Thread] = None
+        self._loop_error: Optional[BaseException] = None
+        self._ready = threading.Event()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "ServeScheduler":
+        if self._started:
+            raise ServeUsageError("ServeScheduler.start() called twice")
+        self._started = True
+        self._loop_thread = threading.Thread(
+            target=self._loop, name="serve-scheduler", daemon=True)
+        self._loop_thread.start()
+        self._ready.wait()
+        if self._loop_error is not None:
+            raise self._loop_error
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Shut down. ``drain=True`` finishes everything already submitted
+        or queued; ``drain=False`` cancels queued requests (in-flight work
+        still completes — lanes cannot be preempted)."""
+        if not self._started or self._closed:
+            return
+        self._closed = True
+        self.ingest.close()
+        self._drain_on_stop = drain
+        self._stop_requested = True
+        self._wake_event.set()
+        assert self._loop_thread is not None
+        self._loop_thread.join()
+        if self._loop_error is not None:
+            raise self._loop_error
+
+    def __enter__(self) -> "ServeScheduler":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # -- client side -------------------------------------------------------
+
+    def open_client(self, client_id: Optional[str] = None) -> ClientHandle:
+        return self.ingest.open_client(client_id)
+
+    def stats(self) -> dict:
+        """Live snapshot (callable from any thread, racy-but-consistent)."""
+        snap = self.metrics.snapshot(rejected=self.ingest.total_rejected())
+        snap["lanes"] = self.lanes
+        snap["in_flight"] = len(self._in_flight)
+        snap["pending"] = self.ingest.pending()
+        snap["config"] = self.config.asdict()
+        return snap
+
+    # -- wake hint (client threads) ---------------------------------------
+
+    def _wake_from_client(self) -> None:
+        # One flag read per submit; Event.set only on park transitions —
+        # the loaded hot path never touches the Event.
+        if self._parked:
+            self._wake_event.set()
+
+    # -- execution (assistant lanes) --------------------------------------
+
+    def _execute(self, resp: Response) -> None:
+        """Run one request on a pool lane. Never raises: the Response is
+        the error channel, so a failing request cannot poison the lane."""
+        req = resp.request
+        first_t: Optional[float] = None
+        try:
+            value = req.fn(*req.args)
+            if hasattr(value, "__next__"):
+                # Streaming work: the first yielded item stamps
+                # first-result time (TTFT for token serving); the
+                # response value is the collected stream.
+                items = []
+                for item in value:
+                    if first_t is None:
+                        first_t = now()
+                        resp.first_result_t = first_t
+                    items.append(item)
+                value = items
+            t = now()
+            if first_t is None:
+                resp.first_result_t = t
+            status = STATUS_OK
+            if req.deadline_t is not None and t > req.deadline_t:
+                status = STATUS_DEADLINE
+            resp._finish(status, value=value, complete_t=t)
+        except BaseException as exc:  # noqa: BLE001 - the future carries it
+            resp._finish(STATUS_ERROR, error=exc, complete_t=now())
+
+    # -- scheduler loop ----------------------------------------------------
+
+    def _loop(self) -> None:
+        sched = None
+        try:
+            if self.lanes > 0:
+                kwargs: Dict[str, Any] = {"lanes": self.lanes}
+                if self._capacity is not None:
+                    kwargs["capacity"] = self._capacity
+                sched = make_scheduler(self._scheduler_name, **kwargs)
+                sched.start()
+        except BaseException as exc:  # noqa: BLE001 - surface via start()
+            self._loop_error = exc
+            self._ready.set()
+            return
+        self._ready.set()
+
+        metrics = self.metrics
+        ingest = self.ingest
+        in_flight = self._in_flight
+        batch_max = self.config.batch_max
+        pause_every = resolve_spin_pause_every()
+        idle_spins = 0
+        try:
+            while True:
+                progressed = False
+
+                # 1. finalize: observe completions without any barrier.
+                if in_flight:
+                    done = [r for r in in_flight.values() if r.done()]
+                    for resp in done:
+                        del in_flight[resp.request.rid]
+                        metrics.note_complete(resp)
+                    if done:
+                        progressed = True
+
+                # 2. admit: fill the sliding window mid-stream.
+                budget = batch_max - len(in_flight)
+                if budget > 0:
+                    batch = ingest.poll(budget)
+                    if batch:
+                        progressed = True
+                        t = now()
+                        submits = []
+                        for resp in batch:
+                            req = resp.request
+                            req.admit_t = t
+                            metrics.admitted += 1
+                            if (req.deadline_t is not None
+                                    and t > req.deadline_t):
+                                # Shed without running: the SLO violation
+                                # is surfaced, the lane time is not spent.
+                                resp._finish(STATUS_DEADLINE, complete_t=t)
+                                metrics.note_complete(resp)
+                                continue
+                            in_flight[req.rid] = resp
+                            submits.append((self._execute, (resp,), {}))
+                        if submits:
+                            if sched is not None:
+                                sched.submit_many(submits)
+                            else:
+                                for fn, args, _ in submits:
+                                    fn(*args)
+                        metrics.queue_depth.observe(ingest.pending())
+                        metrics.batch_occupancy.observe(len(in_flight))
+
+                if self._stop_requested:
+                    if not self._drain_on_stop:
+                        break
+                    if not in_flight and not ingest.pending():
+                        break
+
+                if progressed:
+                    idle_spins = 0
+                    continue
+
+                # 3. idle: spin briefly, then park on the wake Event.
+                idle_spins += 1
+                if idle_spins % pause_every == 0:
+                    time.sleep(0)
+                if idle_spins >= _PARK_AFTER_IDLE_SPINS and not in_flight:
+                    self._wake_event.clear()
+                    self._parked = True
+                    try:
+                        # Double-check after publishing the flag: a submit
+                        # that missed it must be visible in the rings now.
+                        if not ingest.pending() and not self._stop_requested:
+                            if sched is not None:
+                                sched.sleep_hint()
+                            self._wake_event.wait(_PARK_TIMEOUT_S)
+                            if sched is not None:
+                                sched.wake_up_hint()
+                    finally:
+                        self._parked = False
+                    idle_spins = 0
+        except BaseException as exc:  # noqa: BLE001 - surface via stop()
+            self._loop_error = exc
+        finally:
+            # Cancel whatever the stop mode left behind (queued requests on
+            # drain=False, everything on a loop error).
+            for resp in ingest.poll(1 << 30):
+                resp._finish(STATUS_CANCELLED, complete_t=now())
+                metrics.note_complete(resp)
+            deadline = now() + 5.0
+            for resp in list(in_flight.values()):
+                # In-flight work cannot be preempted; wait for the lanes to
+                # publish, then account. Bounded: if the pool broke mid-run
+                # the stragglers are force-cancelled after the deadline.
+                while not resp.done() and now() < deadline:
+                    time.sleep(0)
+                if not resp.done():
+                    resp._finish(STATUS_CANCELLED, complete_t=now())
+                del in_flight[resp.request.rid]
+                metrics.note_complete(resp)
+            if sched is not None:
+                try:
+                    sched.close()
+                except BaseException as exc:  # noqa: BLE001
+                    if self._loop_error is None:
+                        self._loop_error = exc
