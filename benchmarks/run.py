@@ -27,6 +27,10 @@
           costs, chunked over small-ring pools with RelicPool dynamic
           rebalancing ON vs OFF (static PR 5 striping), lanes 2/4 —
           the derived ``vs_static`` is the headline of PR 6
+  faults — robustness: supervision on/off overhead and kill-a-lane
+          detection latency / recovery time / throughput dip at lanes
+          2/4 with respawn, loss accounting asserted exact (no
+          ``speedup=`` on these rows — they gate on invariants)
   roofline — summary of the dry-run artifacts, if present
 
 Output: ``name,us_per_call,derived`` CSV per line on stdout (unchanged
@@ -747,6 +751,118 @@ def run_serve(iters: int, em: Emitter):
                     f"slo_miss={missed};rejected={res.rejected};oracle=ok")
 
 
+def run_faults(iters: int, em: Emitter):
+    """Robustness under injected faults: what a dead lane costs.
+
+    Two measurements, rows carry no ``speedup=`` (robustness is a new
+    axis, not a speedup claim — the gate for these rows is the asserted
+    loss accounting, not a trajectory ratio):
+
+    * ``faults/overhead`` — supervision on vs off: submit_batch+wait of
+      no-op bursts through a 2-lane pool with ``supervise=True`` (the
+      default: liveness probes every 1024 producer spins, heartbeat
+      bookkeeping on check_lanes) against ``supervise=False`` (the exact
+      pre-PR8 spin loops). The on/off ratio is the price of bounded
+      waits; it should be within noise.
+    * ``faults/kill/lanesN`` — kill-a-lane (lanes 2 and 4, respawn on):
+      a seeded KillSwitch takes lane 1 down with its first burst
+      in-flight. Measured: detection latency (death -> check_lanes
+      reporting the quarantine), recovery time (detection -> survivors
+      drained + replacement lane live), and the throughput dip (wall
+      time of the faulted run over a clean same-shape run). The lost
+      count is asserted to equal the dead ring's in-flight count exactly
+      (submitted - completed at death) and the pool ledger to balance —
+      a violated invariant crashes the benchmark rather than emitting a
+      row.
+    """
+    from repro.core.relic_pool import RelicPool
+    from repro.runtime.chaos import KillSwitch
+
+    def noop():
+        return None
+
+    n = max(iters, 200)
+    reps = 5
+
+    em.header("faults: supervision overhead + kill-a-lane detection/"
+              f"recovery (n={n} tasks/burst, {reps} bursts, respawn on)")
+
+    # -- supervision overhead: on vs off, identical submit pattern --------
+    overhead_us = {}
+    for supervise in (True, False):
+        pool = RelicPool(lanes=2, capacity=256, supervise=supervise).start()
+        batch = [(noop, (), {})] * n
+        pool.submit_batch(batch)           # warm the lanes
+        pool.wait()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            pool.submit_batch(batch)
+            pool.wait()
+        dt = time.perf_counter() - t0
+        pool.shutdown()
+        tag = "on" if supervise else "off"
+        overhead_us[tag] = dt / (reps * n) * 1e6
+        em.row(f"faults/overhead/supervise_{tag}", overhead_us[tag],
+               f"lanes=2;n={n};reps={reps}")
+    em.comment(f"supervision overhead: x"
+               f"{overhead_us['on'] / max(overhead_us['off'], 1e-9):.3f} "
+               "(on/off; 1.0 = free)")
+
+    # -- kill-a-lane: detection, recovery, throughput dip -----------------
+    def timed_run(lanes, kill):
+        # start_awake: detection is measured from the polling loop, so the
+        # lanes must be draining (a parked lane never pops the poisoned
+        # burst and the kill would only fire inside wait()).
+        pool = RelicPool(lanes=lanes, capacity=max(n // lanes * 2, 64),
+                         respawn=True, start_awake=True).start()
+        ks = KillSwitch(after_bursts=0).arm(pool._lanes[1]) if kill else None
+        batch = [(noop, (), {})] * n
+        t_start = time.perf_counter()
+        pool.submit_batch(batch)
+        detect_s = recover_s = 0.0
+        failure = None
+        if kill:
+            deadline = time.perf_counter() + 10.0
+            while not failure and time.perf_counter() < deadline:
+                got = pool.check_lanes()
+                if got:
+                    failure = got[0]
+                time.sleep(0)
+            detect_s = time.perf_counter() - t_start
+            while ((pool.in_flight_estimate() > 0
+                    or len(pool.live_lanes) < lanes)
+                   and time.perf_counter() < deadline):
+                time.sleep(0)
+            recover_s = time.perf_counter() - t_start - detect_s
+            pool.take_lane_failures()      # consumed: wait() is clean below
+        pool.wait()
+        total_s = time.perf_counter() - t_start
+        if kill:
+            assert failure is not None, "kill armed but never detected"
+            assert ks.fired, "kill switch never fired"
+            # THE acceptance invariant: lost == the dead ring's in-flight
+            # count at death, and the global ledger balances around it.
+            assert failure.lost == failure.submitted - failure.completed
+            assert failure.lost > 0 and failure.respawned
+            assert (pool.stats.completed + pool.lost_tasks
+                    == pool.stats.submitted)
+            assert pool.live_lanes == tuple(range(lanes))
+        pool.shutdown()
+        return total_s, detect_s, recover_s, failure
+
+    for lanes in (2, 4):
+        clean_s, _, _, _ = timed_run(lanes, kill=False)
+        faulted_s, detect_s, recover_s, failure = timed_run(lanes, kill=True)
+        dip = faulted_s / max(clean_s, 1e-9)
+        em.row(f"faults/kill/lanes{lanes}/detect", detect_s * 1e6,
+               f"lost={failure.lost};submitted={failure.submitted}")
+        em.row(f"faults/kill/lanes{lanes}/recover", recover_s * 1e6,
+               "respawned=ok;survivors_drained=ok")
+        em.row(f"faults/kill/lanes{lanes}/run", faulted_s / n * 1e6,
+               f"clean={clean_s / n * 1e6:.2f}us;dip=x{dip:.2f};"
+               f"lost={failure.lost};ledger=ok")
+
+
 def run_roofline(iters: int, em: Emitter):
     del iters  # summary of recorded artifacts; nothing to measure
     from benchmarks.roofline import load_records
@@ -780,6 +896,7 @@ SECTION_RUNNERS = {
     "scaling": run_scaling,
     "skew": run_skew,
     "serve": run_serve,
+    "faults": run_faults,
     "roofline": run_roofline,
 }
 SECTIONS = list(SECTION_RUNNERS)
@@ -845,7 +962,8 @@ def main(argv=None) -> None:
         import os
 
         from repro.runtime.config import (
-            resolve_serve_config, resolve_spin_pause_every)
+            resolve_serve_config, resolve_spin_pause_every,
+            resolve_supervise_config)
 
         # Host fingerprint: spin cadence + cpu_count + Python version
         # determine the spin/yield regime, so BENCH files are only
@@ -861,6 +979,7 @@ def main(argv=None) -> None:
             "cpu_count": os.cpu_count(),
             "spin_pause_every": resolve_spin_pause_every(),
             "serve": resolve_serve_config().asdict(),
+            "supervise": resolve_supervise_config().asdict(),
         }
         for kv in args.meta:
             key, _, val = kv.partition("=")

@@ -46,6 +46,30 @@ class RelicUsageError(RuntimeError):
     """Raised on API misuse (e.g. submit from the assistant thread)."""
 
 
+class RelicDeadError(RuntimeError):
+    """The assistant thread died with work outstanding.
+
+    Raised by the producer's bounded-wait liveness probes (``_barrier``,
+    ``_push_spin``, ``_push_flat`` check ``assistant.is_alive()`` every
+    ``_PROBE_EVERY_SPINS`` spin rounds when ``RELIC_SUPERVISE`` is on)
+    instead of spinning forever on a counter that can no longer advance.
+    Carries the diagnostics a supervisor needs: which lane, how many tasks
+    were submitted/completed, and how many in-flight tasks are lost with
+    the dead consumer. See docs/robustness.md for the failure model.
+    """
+
+    def __init__(self, lane: str, submitted: int, completed: int,
+                 lost: int) -> None:
+        super().__init__(
+            f"assistant thread {lane!r} is dead: submitted={submitted} "
+            f"completed={completed} lost={lost} (in-flight tasks on a ring "
+            "nothing will ever drain)")
+        self.lane = lane
+        self.submitted = submitted
+        self.completed = completed
+        self.lost = lost
+
+
 def flatten_tasks(
     tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
 ) -> list:
@@ -88,9 +112,18 @@ class RelicStats:
 # Spin-cadence resolution lives with the other env-var knobs in
 # ``repro.runtime.config``; re-exported here because this module is where
 # callers (tests, benchmarks, docs) historically found it.
-from repro.runtime.config import _default_spin_yield, resolve_spin_pause_every
+from repro.runtime.config import (_default_spin_yield,
+                                  resolve_spin_pause_every,
+                                  resolve_supervise_config)
 
 SPIN_PAUSE_EVERY = _default_spin_yield()
+
+# Liveness-probe cadence for the producer's spin loops: one
+# ``Thread.is_alive()`` read per this many spin rounds. Spin rounds are
+# sub-microsecond, so detection latency stays well under a millisecond
+# while the probe cost is amortized to noise; the clean fast paths
+# (submit-with-room, the assistant drain) never reach a probe at all.
+_PROBE_EVERY_SPINS = 1024
 
 
 class Relic:
@@ -125,6 +158,19 @@ class Relic:
         self._oring: Optional[SpscRing] = SpscRing(2 * capacity) if handoff else None
         self._name = name                   # assistant thread name (pool lanes)
         self._spin_pause_every = resolve_spin_pause_every()
+        # Bounded waits (PR 8): with RELIC_SUPERVISE on (the default) the
+        # producer's spin loops probe assistant liveness every
+        # _PROBE_EVERY_SPINS rounds and raise RelicDeadError instead of
+        # hanging; 0 disables every probe (the pre-supervision spins).
+        self._probe_every = (_PROBE_EVERY_SPINS
+                             if resolve_supervise_config().supervise else 0)
+        # Opt-in chaos hook (repro.runtime.chaos): when set, the assistant
+        # calls it once per drained burst (with the burst's task count) and
+        # exits abruptly — simulated thread death — when it returns True.
+        # None for every production instance: the cost on a live assistant
+        # is one attribute load + is-None branch per *burst*, off the
+        # per-task hot path.
+        self._chaos_kill: Optional[Callable[[int], bool]] = None
         self.stats = RelicStats()
         self._completed = 0              # written by assistant only (both rings)
         self._completed_ovf = 0          # handoff-ring completions only
@@ -230,6 +276,7 @@ class Relic:
                 stats.submitted += pushed // 2
         spins = 0
         pause_every = self._spin_pause_every
+        probe_every = self._probe_every
         while pos < n:
             if spins == 0:
                 # Advisory hints must not deadlock a full-ring burst: the
@@ -239,6 +286,8 @@ class Relic:
             spins += 1
             if spins % pause_every == 0:
                 time.sleep(0)
+            if probe_every and spins % probe_every == 0:
+                self._probe_alive()   # a dead consumer never frees a slot
             pushed = ring.push_many(flat, pos, n)
             if pushed:
                 pos += pushed
@@ -250,6 +299,7 @@ class Relic:
         """Full-ring slow path for submit(): bounded ring is the backpressure."""
         spins = 0
         pause_every = self._spin_pause_every
+        probe_every = self._probe_every
         while not self._push2(fn, args):
             if spins == 0:
                 # Hints are advisory (§VI-B): a full ring with a parked
@@ -260,6 +310,8 @@ class Relic:
             spins += 1
             if spins % pause_every == 0:
                 time.sleep(0)  # the Python analogue of `pause`: yield, no park
+            if probe_every and spins % probe_every == 0:
+                self._probe_alive()   # a dead consumer never frees a slot
 
     def wait(self) -> None:
         """Block (busy-wait) until every submitted task has completed."""
@@ -269,11 +321,41 @@ class Relic:
         if err is not None:
             raise err
 
+    def is_alive(self) -> bool:
+        """True while the assistant thread can still make progress: not yet
+        started, or started and its thread is alive. (After a clean
+        ``shutdown`` the assistant reference is dropped and this is True
+        again — a shut-down runtime is not *dead*, it is closed.)"""
+        a = self._assistant
+        return a is None or a.is_alive()
+
+    def _probe_alive(self) -> None:
+        """Liveness probe for the producer's spin loops: raise
+        ``RelicDeadError`` if the assistant thread died. Once dead its
+        ``_completed`` counter is final, so the lost count (submitted but
+        never-to-complete tasks) is deterministic at the raise."""
+        a = self._assistant
+        if a is None or a.is_alive():
+            return
+        submitted = self.stats.submitted
+        completed = self._completed
+        if submitted - completed <= 0:
+            # The assistant finished everything before dying: the caller's
+            # spin condition will observe that on its next check (a dead
+            # counter is final — nothing is lost, nothing can hang).
+            return
+        raise RelicDeadError(self._name, submitted, completed,
+                             submitted - completed)
+
     def _barrier(self) -> None:
         """The spin half of ``wait()``: block until every submitted task
-        completed, raising nothing. RelicPool barriers each lane through
-        this so it can map lane-local error indexes to pool-global
-        submission order *before* the error state is consumed."""
+        completed. RelicPool barriers each lane through this so it can map
+        lane-local error indexes to pool-global submission order *before*
+        the error state is consumed. Raises nothing — except
+        ``RelicDeadError`` when supervision is on and the assistant thread
+        died with the barrier outstanding (the wait-liveness contract,
+        docs/schedulers.md): spinning on a counter whose only writer is
+        gone would never return."""
         target = self.stats.submitted
         if self._completed < target:
             # Advisory hints must not deadlock the barrier: outstanding
@@ -282,10 +364,13 @@ class Relic:
             self._awake.set()
         spins = 0
         pause_every = self._spin_pause_every
+        probe_every = self._probe_every
         while self._completed < target:
             spins += 1
             if spins % pause_every == 0:
                 time.sleep(0)
+            if probe_every and spins % probe_every == 0:
+                self._probe_alive()
         self.stats.completed = self._completed
 
     def _take_error(self) -> Optional[BaseException]:
@@ -368,6 +453,8 @@ class Relic:
                     time.sleep(0)  # `pause`-like: yield the GIL, stay runnable
                 continue
             spins = 0
+            if self._chaos_kill is not None and self._chaos_kill(len(batch) // 2):
+                return  # injected thread death: the popped burst is lost
             completed = self._completed    # assistant-only writer: no race
             for i in range(0, len(batch), 2):
                 try:
@@ -438,6 +525,8 @@ class Relic:
                         time.sleep(0)
                     continue
             spins = 0
+            if self._chaos_kill is not None and self._chaos_kill(len(batch) // 2):
+                return  # injected thread death: the popped burst is lost
             for i in range(0, len(batch), 2):
                 try:
                     batch[i](*batch[i + 1])

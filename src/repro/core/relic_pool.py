@@ -40,6 +40,18 @@ What the pool adds on top of the lanes:
   pushes, that lane's single assistant pops); there is still no MPMC
   structure and no lock anywhere. ``rebalance=False`` reproduces the
   static PR 5 pool bit-for-bit.
+* **Lane supervision & graceful degradation (PR 8).** With
+  ``RELIC_SUPERVISE`` on (the default) every producer slow path is a
+  *bounded* wait: the spin loops periodically probe assistant liveness,
+  so a lane whose thread died is **quarantined** — pulled out of
+  striping, its in-flight tasks deterministically accounted as lost
+  (:class:`LaneFailure`), the event surfaced at ``wait()`` as
+  :class:`LaneFailedError` — instead of hanging the producer forever.
+  ``respawn=True`` additionally rebuilds the slot with a fresh lane
+  (fresh rings, fresh thread), amending the pair's non-restartable
+  contract at pool scope only. A ``LaneSupervisor`` fed from the lanes'
+  completion counters flags stalled and straggling lanes as advisory
+  telemetry (``stalled_lanes()`` / ``straggler_lanes()``).
 * **Broadcast hints.** ``sleep_hint()`` / ``wake_up_hint()`` fan out to
   every lane (paper §VI-B, now meaning "park/unpark the whole pool").
 * **Aggregated stats.** ``stats`` is a live view summing the per-lane
@@ -71,13 +83,67 @@ from __future__ import annotations
 import functools
 import threading
 import time
+from dataclasses import dataclass
 from typing import Any, Callable, Iterable, List, Optional, Tuple
 
-from repro.core.relic import (Relic, RelicStats, RelicUsageError,
-                              flatten_tasks)
+from repro.core.relic import (_PROBE_EVERY_SPINS, Relic, RelicDeadError,
+                              RelicStats, RelicUsageError, flatten_tasks)
 from repro.core.spsc import DEFAULT_CAPACITY
+from repro.runtime.config import resolve_supervise_config
+from repro.runtime.fault import LaneSupervisor
 
-__all__ = ["RelicPool", "RelicPoolStats"]
+__all__ = ["LaneFailedError", "LaneFailure", "RelicPool", "RelicPoolStats"]
+
+
+@dataclass(frozen=True)
+class LaneFailure:
+    """One quarantined lane: the deterministic accounting of a lane death.
+
+    ``lost`` is exactly the dead ring's in-flight count (``submitted`` minus
+    the final ``completed`` — final because the only writer of the
+    completion counter is the dead thread), covering both the primary and
+    the handoff ring. ``error`` carries the lane's pending first task error
+    if one was recorded before death; ``respawned`` says whether a fresh
+    lane took the slot (``RelicPool(respawn=True)``).
+    """
+
+    lane_index: int
+    lane_name: str
+    submitted: int
+    completed: int
+    lost: int
+    error: Optional[BaseException]
+    respawned: bool
+
+
+class LaneFailedError(RelicDeadError):
+    """One or more pool lanes died; surfaced deterministically at
+    ``wait()`` (and by submit paths that can no longer make progress).
+
+    Subclasses :class:`RelicDeadError` so ``except RelicDeadError`` covers
+    both the pair and the pool; ``failures`` holds the per-lane
+    :class:`LaneFailure` records, and the aggregate ``submitted`` /
+    ``completed`` / ``lost`` fields sum them. ``first_task_error`` carries
+    the window's earliest-submitted pending task error, if any — the lane
+    failure outranks it on the error channel, but it stays observable.
+    """
+
+    def __init__(self, failures: Tuple[LaneFailure, ...],
+                 first_task_error: Optional[BaseException] = None) -> None:
+        self.failures = tuple(failures)
+        self.lane = ", ".join(f.lane_name for f in self.failures)
+        self.submitted = sum(f.submitted for f in self.failures)
+        self.completed = sum(f.completed for f in self.failures)
+        self.lost = sum(f.lost for f in self.failures)
+        self.first_task_error = first_task_error
+        detail = "; ".join(
+            f"{f.lane_name}: lost={f.lost}"
+            + (" (respawned)" if f.respawned else "")
+            for f in self.failures)
+        RuntimeError.__init__(
+            self,
+            f"pool lane(s) died [{detail}]: {self.lost} in-flight task(s) "
+            "lost")
 
 
 class RelicPoolStats:
@@ -96,7 +162,11 @@ class RelicPoolStats:
         self._pool = pool
 
     def _sum(self, attr: str) -> int:
-        return sum(getattr(lane.stats, attr) for lane in self._pool._lanes)
+        # _retired folds in the final counters of lanes replaced by a
+        # respawn, keeping every aggregate monotonic across lane swaps.
+        return (getattr(self._pool._retired, attr)
+                + sum(getattr(lane.stats, attr)
+                      for lane in self._pool._lanes))
 
     @property
     def submitted(self) -> int:
@@ -146,6 +216,12 @@ class RelicPoolStats:
         self._pool._stashed_error = value
 
     @property
+    def lost_tasks(self) -> int:
+        """Tasks deterministically written off to dead lanes (the sum of
+        every :class:`LaneFailure`'s ``lost``)."""
+        return self._pool._lost_tasks
+
+    @property
     def lanes(self) -> Tuple[RelicStats, ...]:
         return tuple(lane.stats for lane in self._pool._lanes)
 
@@ -171,10 +247,27 @@ class RelicPool:
     """
 
     def __init__(self, lanes: int = 2, capacity: int = DEFAULT_CAPACITY,
-                 start_awake: bool = False, rebalance: bool = True):
+                 start_awake: bool = False, rebalance: bool = True,
+                 respawn: bool = False, supervise: Optional[bool] = None,
+                 heartbeat_ms: Optional[float] = None):
         if lanes <= 0:
             raise ValueError(f"lanes must be positive, got {lanes}")
         self._n = lanes
+        self._capacity = capacity
+        self._start_awake = start_awake
+        # Graceful degradation (PR 8): a lane whose assistant thread died is
+        # *quarantined* — removed from striping, its in-flight tasks
+        # accounted as lost (see _quarantine_lane), the event surfaced at
+        # the next wait() as LaneFailedError. With ``respawn=True`` a fresh
+        # Relic takes the dead lane's slot so the pool keeps its width; the
+        # pair's non-restartable contract is amended at *pool scope only* —
+        # an individual Relic still never restarts, the pool replaces it.
+        self._respawn = bool(respawn)
+        # kwargs > RELIC_SUPERVISE / RELIC_HEARTBEAT_MS env > defaults.
+        sup_cfg = resolve_supervise_config(supervise=supervise,
+                                           heartbeat_ms=heartbeat_ms)
+        self._supervise = sup_cfg.supervise
+        self._heartbeat_s = sup_cfg.heartbeat_ms / 1000.0
         # Skew resistance (PR 6): with ``rebalance`` on, a burst remainder
         # stuck behind a wedged lane is re-dealt to lanes with room
         # (producer-side re-striping — see _rebalance_pending) and each
@@ -188,6 +281,11 @@ class RelicPool:
                   name=f"relic-pool-lane{i}", handoff=self._rebalance)
             for i in range(lanes)
         ]
+        # The lanes' own bounded-wait probes follow the *pool's* resolved
+        # supervision setting (a kwarg must be able to override the env the
+        # lane constructors just read).
+        for lane in self._lanes:
+            lane._probe_every = _PROBE_EVERY_SPINS if self._supervise else 0
         self._rr = 0                 # round-robin cursor (next lane to try)
         self._seq = 0                # pool-global submission counter
         # Per-window submission log: _runs[i][k] is the global seq of lane
@@ -215,17 +313,37 @@ class RelicPool:
         self._shutdown = False
         self._started = False
         self._main_ident: Optional[int] = None
+        # Lane-supervision state: ``_live`` is the ordered list of lane
+        # indexes still accepting submissions (striping runs over it, not
+        # over range(n)); quarantine removes a slot, respawn re-adds it
+        # with a fresh lane. ``_retired`` accumulates the final counters of
+        # replaced lanes so the aggregate stats view stays monotonic across
+        # a swap, and ``_lost_tasks`` is the cumulative deterministic
+        # lost-task count (see LaneFailure).
+        self._live: List[int] = list(range(lanes))
+        self._failures: List[LaneFailure] = []
+        self._failure_history: List[LaneFailure] = []  # never cleared
+        self._lost_tasks = 0
+        self._retired = RelicStats()
+        self._gen = [0] * lanes      # respawn generation per slot (naming)
+        self._supervisor = (
+            LaneSupervisor(lanes, heartbeat_s=self._heartbeat_s)
+            if self._supervise else None)
         # Hot-path pre-binds: one tuple load per submit instead of chasing
-        # lane -> ring / lane -> stats chains per task.
-        self._hot = [(lane._push2, lane.stats, self._runs[i])
-                     for i, lane in enumerate(self._lanes)]
-        if lanes == 1:
+        # lane -> ring / lane -> stats chains per task. Rebuilt whenever
+        # the live-lane set changes.
+        self._hot: List[tuple] = []
+        self._nl = lanes             # len(_live): the striping modulus
+        self._rebuild_hot()
+        if lanes == 1 and not self._respawn:
             # Degenerate pool == the pair, exactly: with one lane the
             # cursor never moves, every shard is the whole burst, and
             # cross-lane error ordering is the lane's own — so the
             # single-lane configuration pays for none of that bookkeeping
             # ("scaling must not tax the pair", measured by the scaling
-            # benchmark's lanes1-vs-relic rows).
+            # benchmark's lanes1-vs-relic rows). With respawn on the slot
+            # can be re-bound to a fresh lane, so the general striped path
+            # (which reads ``_hot`` per call) is used instead.
             self._lane0 = self._lanes[0]
             self._push2_0 = self._lane0._push2
             self._stats0 = self._lane0.stats
@@ -282,47 +400,66 @@ class RelicPool:
         self._stats0.submitted += 1
 
     def _submit2(self, fn: Callable[..., Any], args: tuple) -> None:
-        """No-checks striped push (the scheduler adapter's fast path)."""
+        """No-checks striped push (the scheduler adapter's fast path).
+        Stripes over the *live* lanes (``_hot`` mirrors ``_live``)."""
         i = self._rr
         nxt = i + 1
-        self._rr = nxt if nxt < self._n else 0
-        push2, lane_stats, runs = self._hot[i]
+        self._rr = nxt if nxt < self._nl else 0
+        push2, lane_stats, runs, li = self._hot[i]
         if push2(fn, args):
             seq = self._seq
             self._seq = seq + 1
             lane_stats.submitted += 1
             runs.append(seq)
             if len(runs) >= self._trim_at:
-                self._trim_runs(i)
+                self._trim_runs(li)
             return
         self._submit_overflow(fn, args)
 
+    def _submit2_dead(self, fn: Callable[..., Any], args: tuple) -> None:
+        """Bound over ``_submit2`` once every lane is quarantined with
+        respawn off: the pool can never run another task, so submitting
+        raises instead of silently feeding a dead ring. (Pre-bound
+        references — the scheduler adapter binds ``_submit2`` once — are
+        covered by the sentinel hot entry ``_rebuild_hot`` installs, whose
+        "push" raises the same way.)"""
+        self._raise_pool_dead()
+
     def _submit_overflow(self, fn: Callable[..., Any], args: tuple) -> None:
-        """Round-robin target full: try the other lanes least-loaded first
-        (by the ring's racy-but-monotonic ``len()`` — reading another
-        lane's ring from here is the observer case its clamp exists for; a
-        stale read costs balance, never correctness) and busy-wait
-        *sweeping* until some lane accepts. Sweeping — rather than
-        committing to one fallback lane — keeps the pool live when a lane
-        is wedged behind a long task: backpressure engages only while
+        """Round-robin target full: try the other live lanes least-loaded
+        first (by the ring's racy-but-monotonic ``len()`` — reading
+        another lane's ring from here is the observer case its clamp
+        exists for; a stale read costs balance, never correctness) and
+        busy-wait *sweeping* until some lane accepts. Sweeping — rather
+        than committing to one fallback lane — keeps the pool live when a
+        lane is wedged behind a long task: backpressure engages only while
         every ring is full. With rebalancing on, "every ring" includes the
         handoff rings: a pool whose primaries are all backed up hands the
         task to the least-loaded lane's handoff ring (its assistant pulls
-        from it when its primary goes idle) before resigning to the spin."""
+        from it when its primary goes idle) before resigning to the spin.
+
+        The spin is *bounded* (PR 8): every ``_PROBE_EVERY_SPINS``
+        no-progress rounds it sweeps lane liveness (``check_lanes``), so a
+        pool spinning on rings whose assistants died quarantines them —
+        respawn refills the slot with an empty ring the next round, and a
+        fully-dead pool raises ``LaneFailedError`` instead of hanging."""
         lanes = self._lanes
-        hot = self._hot
-        n = self._n
         rebalance = self._rebalance
+        supervise = self._supervise
         spins = 0
         pause_every = lanes[0]._spin_pause_every
         while True:
-            order = sorted(range(n), key=lambda j: len(lanes[j]._ring))
+            live = self._live
+            if not live:
+                self._raise_pool_dead()
+            order = sorted(live, key=lambda j: len(lanes[j]._ring))
             for j in order:
-                push2, lane_stats, runs = hot[j]
-                if push2(fn, args):
+                lane = lanes[j]
+                if lane._push2(fn, args):
                     seq = self._seq
                     self._seq = seq + 1
-                    lane_stats.submitted += 1
+                    lane.stats.submitted += 1
+                    runs = self._runs[j]
                     runs.append(seq)
                     if len(runs) >= self._trim_at:
                         self._trim_runs(j)
@@ -349,6 +486,8 @@ class RelicPool:
             spins += 1
             if spins % pause_every == 0:
                 time.sleep(0)
+            if supervise and spins % _PROBE_EVERY_SPINS == 0:
+                self.check_lanes()
 
     def submit_batch(
         self, tasks: Iterable[Tuple[Callable[..., Any], tuple, dict]]
@@ -385,25 +524,34 @@ class RelicPool:
         k = len(flat) // 2
         if not k:
             return
-        n = self._n
-        if n == 1:
+        if self._n == 1 and not self._respawn:
             # Degenerate pool: the whole burst is lane 0's shard, and the
-            # seq log is pointless with nothing to order across.
+            # seq log is pointless with nothing to order across. (The
+            # push raises RelicDeadError — bounded, never a hang — if the
+            # assistant died mid-burst; with respawn off there is no slot
+            # to rebuild, so it propagates as-is.)
             self._lanes[0]._push_flat(flat, account=True)
             return
+        live = self._live
+        n = len(live)
+        if n == 0:
+            self._raise_pool_dead()
         share, rem = divmod(k, n)
         seq0 = self._seq
         self._seq = seq0 + k
         cursor = self._rr
+        if cursor >= n:
+            cursor = 0
         pos = 0                       # task offset into the burst
         pending: List[list] = []      # [lane_idx, next_slot, stop_slot]
         for step in range(n):
             take = share + (1 if step < rem else 0)
             if take == 0:
                 break                 # k < n: only the first k lanes get one
-            i = cursor + step
-            if i >= n:
-                i -= n
+            s = cursor + step
+            if s >= n:
+                s -= n
+            i = live[s]
             lane = self._lanes[i]
             start2, stop2 = 2 * pos, 2 * (pos + take)
             pushed = lane._ring.push_many(flat, start2, stop2)
@@ -447,9 +595,18 @@ class RelicPool:
         free-slot count every ``push_many`` sees is even by induction.
         When a whole sweep makes no progress and rebalancing is on, the
         stuck remainders are re-striped to lanes with room before the
-        producer resigns itself to spinning."""
+        producer resigns itself to spinning.
+
+        Like ``_submit_overflow`` the spin is bounded (PR 8): a periodic
+        liveness sweep quarantines dead lanes mid-burst. A respawned slot
+        offers the remainder a fresh empty ring; with rebalancing on the
+        remainder re-stripes to the survivors; with *both* off a dead
+        slot's remainder can never drain, so the sweep raises
+        ``LaneFailedError`` (the un-pushed remainder stays unaccounted —
+        the same interrupt-safety contract as a KeyboardInterrupt here)."""
         lanes = self._lanes
         rebalance = self._rebalance
+        supervise = self._supervise
         spins = 0
         pause_every = lanes[0]._spin_pause_every
         while pending:
@@ -481,6 +638,11 @@ class RelicPool:
                 spins += 1
                 if spins % pause_every == 0:
                     time.sleep(0)
+                if supervise and spins % _PROBE_EVERY_SPINS == 0 \
+                        and self.check_lanes():
+                    if not self._respawn and not rebalance and any(
+                            e[0] not in self._live for e in pending):
+                        raise LaneFailedError(tuple(self._failures))
 
     def _rebalance_pending(self, flat: list, pending: List[list],
                            seq0: int) -> bool:
@@ -500,7 +662,7 @@ class RelicPool:
         them keeps this pass O(lanes) per remainder."""
         lanes = self._lanes
         stuck = {entry[0] for entry in pending}
-        order = sorted((j for j in range(self._n) if j not in stuck),
+        order = sorted((j for j in self._live if j not in stuck),
                        key=lambda j: len(lanes[j]._ring))
         moved = False
         for entry in list(pending):
@@ -548,11 +710,26 @@ class RelicPool:
         stale-index bugfix). The earliest-submitted error re-raises; all
         other errors from this window are dropped from the error channel
         (they remain counted in ``stats.task_errors``) — the same
-        later-failures-only-bump rule the pair applies within one lane."""
+        later-failures-only-bump rule the pair applies within one lane.
+
+        Lane deaths outrank task errors (PR 8): a barrier that finds a
+        dead assistant (its bounded-wait probe raises ``RelicDeadError``)
+        quarantines the lane — respawning into the slot when enabled —
+        and ``wait()`` raises :class:`LaneFailedError` carrying every
+        queued :class:`LaneFailure` (including ones detected earlier by
+        ``check_lanes`` or a submit path). The window's earliest pending
+        *task* error, if any, rides along as ``first_task_error``."""
         self._check_main("wait()")
         errors: List[Tuple[int, BaseException]] = []
-        for i, lane in enumerate(self._lanes):
-            lane._barrier()
+        for i in range(self._n):
+            if i not in self._live:
+                continue    # quarantined: frozen, nothing will ever drain it
+            lane = self._lanes[i]
+            try:
+                lane._barrier()
+            except RelicDeadError:
+                self._quarantine_lane(i, lane)
+                continue
             if lane.stats.last_error is not None:
                 seq = self._pending_error_seq(i, lane.stats)
                 err = lane._take_error()
@@ -567,9 +744,182 @@ class RelicPool:
             self._runs[i].clear()
             self._obase[i] += len(self._oruns[i])
             self._oruns[i].clear()
+        errors.sort(key=lambda pair: pair[0])
+        if self._failures:
+            failures = tuple(self._failures)
+            self._failures.clear()
+            raise LaneFailedError(
+                failures,
+                first_task_error=errors[0][1] if errors else None)
+        if not self._live:
+            # Permanently dead pool (every lane quarantined, respawn off):
+            # each wait() keeps raising — a silent return here would let
+            # post-death submissions into dead rings pass as "completed".
+            raise LaneFailedError(
+                tuple(self._failure_history),
+                first_task_error=errors[0][1] if errors else None)
         if errors:
-            errors.sort(key=lambda pair: pair[0])
             raise errors[0][1]
+
+    # ------------------------------------------------- lane supervision (PR 8)
+
+    def _rebuild_hot(self) -> None:
+        """Regenerate the submit pre-binds from the live-lane set (called
+        at construction and after every quarantine/respawn)."""
+        self._hot = [
+            (self._lanes[i]._push2, self._lanes[i].stats, self._runs[i], i)
+            for i in self._live
+        ]
+        self._nl = len(self._hot)
+        if self._rr >= self._nl:
+            self._rr = 0
+        if self._nl == 0:
+            # Every lane dead, respawn off: fail fast on the submit path.
+            # The sentinel hot entry keeps *pre-bound* callers (the
+            # scheduler adapter binds the class ``_submit2`` once) raising
+            # too: its "push" is the raise itself.
+            self._submit2 = self._submit2_dead
+            self._hot = [(self._raise_pool_dead_push, None, [], -1)]
+            self._nl = 1
+
+    def _raise_pool_dead_push(self, fn: Callable[..., Any],
+                              args: tuple) -> bool:
+        self._raise_pool_dead()
+        return False               # pragma: no cover - unreachable
+
+    def _raise_pool_dead(self) -> None:
+        raise LaneFailedError(tuple(self._failures or self._failure_history))
+
+    def _quarantine_lane(self, li: int, dead: Relic) -> LaneFailure:
+        """Remove a dead lane from striping (pool-owner thread only),
+        account its in-flight tasks as lost, and — with ``respawn=True`` —
+        put a fresh lane in the slot.
+
+        The lost count is final arithmetic, not an estimate: the
+        completion counter's only writer is the dead thread, so
+        ``submitted - completed`` is exactly the tasks stranded across the
+        lane's primary and handoff rings. SPSC invariants survive by
+        construction — nothing ever pops a quarantined ring again (its
+        single consumer is the dead thread), and a respawned slot gets a
+        brand-new :class:`Relic` with fresh rings, so every ring keeps
+        exactly one producer and one consumer for its whole lifetime."""
+        self._live.remove(li)
+        submitted = dead.stats.submitted
+        completed = dead._completed
+        dead.stats.completed = completed  # final snapshot for the stats view
+        lost = submitted - completed
+        self._lost_tasks += lost
+        failure = LaneFailure(
+            lane_index=li, lane_name=dead._name, submitted=submitted,
+            completed=completed, lost=lost, error=dead.stats.last_error,
+            respawned=self._respawn)
+        self._failures.append(failure)
+        self._failure_history.append(failure)
+        if self._respawn:
+            # Retire the dead lane's final counters into the aggregate so
+            # the pool stats stay monotonic across the swap, then rebuild
+            # the slot: fresh Relic (fresh rings), reset seq logs, reset
+            # the supervisor's memory of the slot.
+            r, s = self._retired, dead.stats
+            r.submitted += submitted
+            r.completed += completed
+            r.task_errors += s.task_errors
+            r.producer_full_spins += s.producer_full_spins
+            r.assistant_empty_spins += s.assistant_empty_spins
+            r.parks += s.parks
+            self._gen[li] += 1
+            fresh = Relic(capacity=self._capacity,
+                          start_awake=self._start_awake,
+                          name=f"relic-pool-lane{li}-r{self._gen[li]}",
+                          handoff=self._rebalance)
+            fresh._probe_every = (_PROBE_EVERY_SPINS if self._supervise
+                                  else 0)
+            self._lanes[li] = fresh
+            self._runs[li] = []
+            self._base[li] = 0
+            self._oruns[li] = []
+            self._obase[li] = 0
+            if self._supervisor is not None:
+                self._supervisor.reset_lane(li)
+            if self._started:
+                fresh.start()
+            self._live.append(li)
+            self._live.sort()
+        self._rebuild_hot()
+        return failure
+
+    def check_lanes(self) -> List[LaneFailure]:
+        """Supervision sweep (pool-owner thread only): quarantine lanes
+        whose assistant thread died — respawning when enabled — and feed
+        the :class:`LaneSupervisor` one progress-heartbeat sample. Cheap
+        to call often (the supervisor samples once per heartbeat period).
+        Returns the *new* failures; they also stay queued for the next
+        ``wait()`` unless drained with ``take_lane_failures``."""
+        if not self._supervise:
+            return []
+        new: List[LaneFailure] = []
+        for li in list(self._live):
+            lane = self._lanes[li]
+            if not lane.is_alive():
+                new.append(self._quarantine_lane(li, lane))
+        sup = self._supervisor
+        if sup is not None:
+            completed: List[int] = []
+            outstanding: List[int] = []
+            for li, lane in enumerate(self._lanes):
+                done = lane._completed
+                completed.append(done)
+                # A quarantined slot reads as idle, not stalled: nothing
+                # is outstanding that supervision could still save.
+                outstanding.append(
+                    (lane.stats.submitted - done) if li in self._live else 0)
+            sup.observe(completed, outstanding)
+        return new
+
+    def take_lane_failures(self) -> Tuple[LaneFailure, ...]:
+        """Drain the queued quarantine records without a barrier
+        (pool-owner thread only) — the serve loop's fire-and-observe
+        supervision read. Once drained, ``wait()`` no longer raises for
+        these failures."""
+        if not self._failures:
+            return ()
+        out = tuple(self._failures)
+        self._failures.clear()
+        return out
+
+    def in_flight_estimate(self) -> int:
+        """Racy-but-monotone estimate of tasks admitted to live rings and
+        not yet executed: total submitted minus total completed minus the
+        tasks written off as lost. Reads each lane's live completion
+        counter directly (the per-lane ``stats.completed`` snapshot only
+        refreshes at barriers, which a serving loop never runs). Reaches
+        exactly 0 once the live lanes drain — the serve layer's quiesce
+        predicate after a lane death."""
+        submitted = self._retired.submitted
+        completed = self._retired.completed
+        for lane in self._lanes:
+            submitted += lane.stats.submitted
+            completed += lane._completed
+        est = submitted - completed - self._lost_tasks
+        return est if est > 0 else 0
+
+    def stalled_lanes(self) -> List[int]:
+        """Advisory: slots with outstanding work and no completion
+        progress for ~2 heartbeat periods (see ``LaneSupervisor``)."""
+        return [] if self._supervisor is None else self._supervisor.stalled()
+
+    def straggler_lanes(self) -> List[int]:
+        """Advisory: slots persistently slower than their peers."""
+        return ([] if self._supervisor is None
+                else self._supervisor.stragglers())
+
+    @property
+    def live_lanes(self) -> Tuple[int, ...]:
+        return tuple(self._live)
+
+    @property
+    def lost_tasks(self) -> int:
+        return self._lost_tasks
 
     def _trim_runs(self, lane_idx: int) -> None:
         """Drop seq-log entries for tasks the lane has already completed,

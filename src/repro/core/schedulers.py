@@ -21,6 +21,8 @@ Substrate-to-paper-framework mapping (see docs/schedulers.md):
   spin        mutex-protected deque + spin waits     X-OpenMP (lock + spin)
   condvar     bounded queue, condvar suspension      GNU OpenMP (suspension)
   pool        general thread pool + futures          oneTBB / Taskflow
+  chaos       fault-injecting wrapper over any of    the chaos harness
+              the above (repro.runtime.chaos)        (robustness testing)
   ==========  =====================================  =======================
 
 The observable contract (enforced by tests/test_schedulers_conformance.py):
@@ -85,6 +87,7 @@ __all__ = [
     "SpinQueueScheduler",
     "CondvarQueueScheduler",
     "PoolScheduler",
+    "ChaosScheduler",
     "available_schedulers",
     "make_scheduler",
     "register_scheduler",
@@ -419,14 +422,19 @@ class RelicPoolScheduler(_RelicAdapterBase):
     benchmark section runs both)."""
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY, lanes: int = 2,
-                 start_awake: bool = True, rebalance: bool = True):
+                 start_awake: bool = True, rebalance: bool = True,
+                 respawn: bool = False, supervise: Optional[bool] = None,
+                 heartbeat_ms: Optional[float] = None):
         super().__init__()
         self._rt = self._pool = RelicPool(lanes=lanes, capacity=capacity,
                                           start_awake=start_awake,
-                                          rebalance=rebalance)
+                                          rebalance=rebalance,
+                                          respawn=respawn,
+                                          supervise=supervise,
+                                          heartbeat_ms=heartbeat_ms)
         # Hot-path pre-bind: the pool's no-checks striped push.
         self._submit2 = self._pool._submit2
-        if lanes == 1:
+        if lanes == 1 and not respawn:
             # Degenerate pool, adapter edition: shadow submit() with a
             # closure whose hot path is byte-for-byte the pair adapter's
             # (free-variable loads, no pool hop) — the lanes=1 scaling
@@ -464,6 +472,24 @@ class RelicPoolScheduler(_RelicAdapterBase):
         if kwargs:
             fn = functools.partial(fn, **kwargs)
         self._submit2(fn, args)
+
+    # Lane-supervision pass-throughs (PR 8) for fire-and-observe consumers
+    # (the serve loop never calls wait(), so it reads lane health here).
+    def poll_lane_failures(self):
+        """One supervision sweep + drain: quarantine newly dead lanes
+        (respawning when configured) and return every not-yet-consumed
+        ``LaneFailure``. Owning-thread only."""
+        self._pool.check_lanes()
+        return self._pool.take_lane_failures()
+
+    def in_flight_estimate(self) -> int:
+        return self._pool.in_flight_estimate()
+
+    def stalled_lanes(self):
+        return self._pool.stalled_lanes()
+
+    def straggler_lanes(self):
+        return self._pool.straggler_lanes()
 
 
 def _register_pool_convenience(name: str, lanes: int) -> None:
@@ -782,3 +808,12 @@ class PoolScheduler(_SchedulerBase):
         # every future is done after shutdown(wait=True); record outcomes
         # (close() must not raise — errors stay observable in stats)
         self._reap(block=True)
+
+
+# Registered last so the registry is complete the moment this module is
+# importable: the chaos wrapper lives in repro.runtime.chaos (which must
+# not import this module at top level — it resolves make_scheduler lazily)
+# and joins the registry here, exactly like the substrates defined above.
+from repro.runtime.chaos import ChaosScheduler  # noqa: E402
+
+register_scheduler("chaos")(ChaosScheduler)

@@ -1,6 +1,7 @@
 from repro.runtime.fault import (  # noqa: F401
     ElasticPlan,
     HeartbeatTracker,
+    LaneSupervisor,
     StragglerMonitor,
     plan_elastic_remesh,
 )

@@ -1,0 +1,313 @@
+"""Chaos harness: seeded, deterministic fault injection for the runtime.
+
+Robustness claims are only as good as the faults they were tested against,
+and ad-hoc "kill a thread in a test" coverage rots. This module makes fault
+injection a first-class, *reproducible* input to the existing machinery:
+
+* :class:`ChaosSpec` — one frozen, validated description of a fault mix
+  (task-raise rate, task-stall rate/duration, assistant-kill point,
+  admission-burst intensity), parseable from the ``RELIC_CHAOS`` env var so
+  CI can re-run a whole suite under a pinned fault plan.
+* :class:`FaultPlan` — the seeded per-task decision stream. Decorating a
+  task draws once from a private ``random.Random(seed)``: same spec, same
+  submission order ⇒ byte-identical fault placement, every run.
+* :class:`ChaosScheduler` — a scheduler-SPI *wrapper* substrate registered
+  as ``"chaos"``: it decorates every submitted task per the plan and
+  delegates everything else to an inner substrate from the registry
+  (``spec.inner``, default ``relic``). Because registration makes it a
+  peer of the real substrates, the conformance suite picks it up
+  automatically (tests/test_schedulers_conformance.py's registry tripwire)
+  and re-runs the *entire* observable contract under injected faults — the
+  default spec is therefore semantics-preserving (stall-only: stalls delay
+  a task but still run it; ``raise_rate`` defaults to 0 because a raise
+  replaces the task's effect and only dedicated tests opt into that).
+* :class:`KillSwitch` — arms the assistant-kill hook ``Relic`` exposes for
+  tests (``_chaos_kill``, a ``None``-checked callable off the hot path):
+  the assistant thread exits mid-loop after a chosen number of drained
+  bursts, losing the popped burst — the deterministic "lane died with
+  in-flight work" scenario the supervision layer must account for exactly.
+
+No module-level import of ``repro.core.schedulers`` (it imports the relic
+family, which must stay importable without this module): the registry is
+resolved lazily inside ``ChaosScheduler.__init__``, and registration of
+the ``"chaos"`` name happens at the bottom of ``schedulers.py`` so the
+registry is complete the moment it is importable.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "ChaosInjectedError",
+    "ChaosSpec",
+    "FaultPlan",
+    "KillSwitch",
+    "ChaosScheduler",
+    "plan_bursts",
+]
+
+
+class ChaosInjectedError(RuntimeError):
+    """The error an injected task-raise fault throws. Its own type so
+    assertions can distinguish injected faults from real bugs."""
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """One validated, frozen fault mix.
+
+    ``raise_rate`` / ``stall_rate`` are per-task probabilities (drawn from
+    one seeded stream — see :class:`FaultPlan`); ``stall_s`` is the
+    straggler stall duration; ``kill_after`` arms a :class:`KillSwitch`
+    (``None`` = never kill); ``burst`` is the admission-burst intensity
+    (max requests per burst for ``plan_bursts``); ``inner`` names the
+    wrapped substrate for :class:`ChaosScheduler`.
+
+    The defaults are deliberately *semantics-preserving* (mild stall-only)
+    so the full conformance suite passes under them: a stalled task still
+    runs, in order, with its real result and its real exception.
+    """
+
+    seed: int = 0
+    raise_rate: float = 0.0
+    stall_rate: float = 1.0 / 64.0
+    stall_s: float = 0.0002
+    kill_after: Optional[int] = None
+    burst: int = 0
+    inner: str = "relic"
+
+    def __post_init__(self) -> None:
+        for name in ("raise_rate", "stall_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v!r}")
+        if self.raise_rate + self.stall_rate > 1.0:
+            raise ValueError(
+                "raise_rate + stall_rate must not exceed 1 "
+                f"(got {self.raise_rate} + {self.stall_rate})")
+        if self.stall_s < 0:
+            raise ValueError(f"stall_s must be >= 0, got {self.stall_s!r}")
+        if self.kill_after is not None and self.kill_after < 0:
+            raise ValueError(
+                f"kill_after must be None or >= 0, got {self.kill_after!r}")
+        if self.burst < 0:
+            raise ValueError(f"burst must be >= 0, got {self.burst!r}")
+
+    @classmethod
+    def from_env(cls) -> "ChaosSpec":
+        """Parse ``RELIC_CHAOS`` (``key=value`` pairs, comma-separated,
+        e.g. ``"seed=7,stall_rate=0.05,stall_s=0.001,inner=relic-pool"``).
+        Unset/empty yields the defaults; unknown keys or malformed values
+        raise ``ValueError`` (same discipline as every knob in
+        ``repro.runtime.config``)."""
+        raw = os.environ.get("RELIC_CHAOS")
+        if not raw:
+            return cls()
+        spec = cls()
+        for part in raw.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(
+                    f"RELIC_CHAOS entries must be key=value, got {part!r}")
+            key, _, value = part.partition("=")
+            key = key.strip()
+            value = value.strip()
+            try:
+                if key in ("seed", "burst"):
+                    spec = replace(spec, **{key: int(value)})
+                elif key in ("raise_rate", "stall_rate", "stall_s"):
+                    spec = replace(spec, **{key: float(value)})
+                elif key == "kill_after":
+                    spec = replace(
+                        spec,
+                        kill_after=None if value == "none" else int(value))
+                elif key == "inner":
+                    spec = replace(spec, inner=value)
+                else:
+                    raise ValueError(
+                        f"RELIC_CHAOS: unknown key {key!r}")
+            except ValueError as e:
+                if "unknown key" in str(e) or "must be" in str(e):
+                    raise
+                raise ValueError(
+                    f"RELIC_CHAOS: bad value for {key!r}: {value!r}"
+                ) from None
+        return spec
+
+
+class FaultPlan:
+    """The seeded per-task fault stream for one scheduler instance.
+
+    ``decorate(fn)`` draws exactly one uniform variate per task — in
+    submission order, from a private ``Random(spec.seed)`` — and returns
+    either ``fn`` itself (the common case: zero wrapping, zero overhead
+    downstream), a *stall* wrapper (sleeps ``stall_s`` then runs ``fn``,
+    preserving its result and exceptions), or a *raise* stub (replaces the
+    task with :class:`ChaosInjectedError`; only specs that opted into
+    ``raise_rate > 0`` see these). Counters record what was injected so
+    tests can assert against the plan rather than re-deriving it.
+    """
+
+    def __init__(self, spec: ChaosSpec):
+        self.spec = spec
+        self._rng = random.Random(spec.seed)
+        self.injected_raises = 0
+        self.injected_stalls = 0
+
+    def decorate(self, fn: Callable[..., Any]) -> Callable[..., Any]:
+        r = self._rng.random()
+        spec = self.spec
+        if r < spec.raise_rate:
+            self.injected_raises += 1
+            idx = self.injected_raises
+
+            def chaos_raise(*args: Any, **kwargs: Any) -> Any:
+                raise ChaosInjectedError(f"injected task fault #{idx}")
+
+            return chaos_raise
+        if r < spec.raise_rate + spec.stall_rate:
+            self.injected_stalls += 1
+            stall = spec.stall_s
+
+            def chaos_stall(*args: Any, **kwargs: Any) -> Any:
+                time.sleep(stall)
+                return fn(*args, **kwargs)
+
+            return chaos_stall
+        return fn
+
+
+def plan_bursts(spec: ChaosSpec, total: int) -> List[int]:
+    """Deterministic admission-burst sizes summing to ``total``: the
+    seeded shape a bursty client drives the serve layer with (each burst
+    uniform in ``[1, spec.burst]``; ``burst=0`` degrades to one-by-one).
+    A separate stream from :class:`FaultPlan` (``seed + 1``) so bursting a
+    workload does not shift its task-fault placement."""
+    if total < 0:
+        raise ValueError(f"total must be >= 0, got {total}")
+    if spec.burst <= 1:
+        return [1] * total
+    rng = random.Random(spec.seed + 1)
+    out: List[int] = []
+    left = total
+    while left > 0:
+        n = min(left, rng.randint(1, spec.burst))
+        out.append(n)
+        left -= n
+    return out
+
+
+class KillSwitch:
+    """Arms ``Relic``'s opt-in assistant-kill hook (``_chaos_kill``).
+
+    The hook is a ``None``-checked callable the assistant loop consults
+    once per drained burst, *after* popping it and *before* executing it —
+    so firing kills the thread with the popped burst unexecuted and the
+    deterministic lost count is exactly ``submitted - completed`` at the
+    moment of death (what :class:`repro.core.relic_pool.LaneFailure`
+    asserts). ``after_bursts`` bursts are allowed through first; the
+    switch records what it did (``fired``, ``lost_tasks``) for tests."""
+
+    def __init__(self, after_bursts: int = 0):
+        if after_bursts < 0:
+            raise ValueError(
+                f"after_bursts must be >= 0, got {after_bursts}")
+        self.after_bursts = after_bursts
+        self.fired = False
+        self.lost_tasks = 0
+        self._seen = 0
+
+    def __call__(self, batch_tasks: int) -> bool:
+        if self.fired:
+            return True
+        if self._seen >= self.after_bursts:
+            self.fired = True
+            self.lost_tasks = batch_tasks
+            return True
+        self._seen += 1
+        return False
+
+    def arm(self, relic: Any) -> "KillSwitch":
+        """Attach to a ``Relic`` (or a pool lane). The hook field is part
+        of the runtime's test surface: a plain attribute, ``None`` in
+        production, checked once per drained burst off the hot path."""
+        relic._chaos_kill = self
+        return self
+
+
+class ChaosScheduler:
+    """The ``"chaos"`` substrate: an SPI wrapper injecting a seeded fault
+    plan into every task before delegating to an inner registry substrate.
+
+    Pure delegation — lifecycle, misuse classification, stats, hints,
+    ``workers``, bounded backpressure are all the inner substrate's own
+    (so the conformance suite exercises *its* contract under faults, not a
+    re-implementation). Only ``submit``/``submit_many`` add work: one RNG
+    draw and (rarely) one closure per task.
+    """
+
+    def __init__(self, capacity: Optional[int] = None,
+                 spec: Optional[ChaosSpec] = None, **inner_kwargs: Any):
+        # Late import: the registry lives in schedulers.py, which imports
+        # the relic family; importing it at module level here would cycle
+        # through the registration at its bottom.
+        from repro.core.schedulers import make_scheduler
+        self.spec = spec if spec is not None else ChaosSpec.from_env()
+        self.plan = FaultPlan(self.spec)
+        if capacity is not None:
+            inner_kwargs.setdefault("capacity", capacity)
+        self._inner = make_scheduler(self.spec.inner, **inner_kwargs)
+
+    @property
+    def workers(self) -> int:
+        return getattr(self._inner, "workers", 1)
+
+    @property
+    def _started(self) -> bool:
+        # Lifecycle state must stay visible through the wrapper: callers
+        # (e.g. run_wavefronts) duck-type on this before borrowing a
+        # scheduler, and hiding it would let them adopt an unstarted one.
+        return getattr(self._inner, "_started", True)
+
+    @property
+    def stats(self) -> Any:
+        return self._inner.stats
+
+    def start(self) -> "ChaosScheduler":
+        self._inner.start()
+        return self
+
+    def submit(self, fn: Callable[..., Any], *args: Any,
+               **kwargs: Any) -> None:
+        self._inner.submit(self.plan.decorate(fn), *args, **kwargs)
+
+    def submit_many(self, tasks: Iterable[Tuple[Callable[..., Any],
+                                                tuple, dict]]) -> None:
+        self._inner.submit_many(
+            [(self.plan.decorate(fn), args, kwargs)
+             for fn, args, kwargs in tasks])
+
+    def wait(self) -> None:
+        self._inner.wait()
+
+    def sleep_hint(self) -> None:
+        self._inner.sleep_hint()
+
+    def wake_up_hint(self) -> None:
+        self._inner.wake_up_hint()
+
+    def close(self) -> None:
+        self._inner.close()
+
+    def __enter__(self) -> "ChaosScheduler":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

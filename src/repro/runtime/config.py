@@ -23,9 +23,26 @@ Two families:
       batcher keeps admitted at once (default 8).
     - ``RELIC_SERVE_DEADLINE_MS``: default per-request deadline in
       milliseconds; unset/empty means no deadline.
+    - ``RELIC_SERVE_RETRIES``: max *extra* attempts the server grants an
+      idempotent-marked request whose task erred or whose lane died
+      (default 2; ``0`` disables retry).
 
-``resolve_serve_config()`` returns a frozen snapshot recorded in BENCH meta
-alongside the spin cadence, so a recorded run's knob state is reproducible.
+``RELIC_SUPERVISE`` / ``RELIC_HEARTBEAT_MS``
+    The liveness/supervision knobs (docs/robustness.md):
+
+    - ``RELIC_SUPERVISE``: ``1`` (default) arms the bounded-wait liveness
+      probes (every producer spin loop periodically checks
+      ``assistant.is_alive()`` and raises ``RelicDeadError`` instead of
+      hanging) and the pool's ``LaneSupervisor``; ``0`` restores the
+      pre-supervision behaviour exactly (unbounded spins).
+    - ``RELIC_HEARTBEAT_MS``: cadence (milliseconds, default 100) at which
+      the ``LaneSupervisor`` samples per-lane progress heartbeats into
+      ``HeartbeatTracker``/``StragglerMonitor``; a lane with outstanding
+      work and no progress for one full period is flagged as stalled.
+
+``resolve_serve_config()`` / ``resolve_supervise_config()`` return frozen
+snapshots recorded in BENCH meta alongside the spin cadence, so a recorded
+run's knob state is reproducible.
 """
 
 from __future__ import annotations
@@ -83,6 +100,7 @@ class ServeConfig:
     queue_depth: int = 64
     batch_max: int = 8
     deadline_ms: Optional[float] = None
+    retries: int = 2
 
     def asdict(self) -> dict:
         return asdict(self)
@@ -94,6 +112,7 @@ def resolve_serve_config(
     queue_depth: Optional[int] = None,
     batch_max: Optional[int] = None,
     deadline_ms: Optional[float] = None,
+    retries: Optional[int] = None,
 ) -> ServeConfig:
     """Resolve the serving knobs for a *new* ``ServeScheduler``/``Ingest``.
 
@@ -133,9 +152,91 @@ def resolve_serve_config(
             "RELIC_SERVE_DEADLINE_MS must be a positive number, "
             f"got {deadline_ms!r}")
 
+    if retries is None:
+        raw = os.environ.get("RELIC_SERVE_RETRIES")
+        retries = _non_negative_int(
+            "RELIC_SERVE_RETRIES", raw) if raw else 2
+    elif not isinstance(retries, int) or retries < 0:
+        raise ValueError(
+            f"RELIC_SERVE_RETRIES must be a non-negative int, got {retries!r}")
+
     return ServeConfig(
         admission=admission,
         queue_depth=queue_depth,
         batch_max=batch_max,
         deadline_ms=deadline_ms,
+        retries=retries,
     )
+
+
+def _non_negative_int(name: str, raw: str) -> int:
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be a non-negative int, got {raw!r}") from None
+    if value < 0:
+        raise ValueError(f"{name} must be a non-negative int, got {raw!r}")
+    return value
+
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+@dataclass(frozen=True)
+class SuperviseConfig:
+    """Resolved ``RELIC_SUPERVISE``/``RELIC_HEARTBEAT_MS`` knob snapshot
+    for one runtime instance (a ``Relic``, a ``RelicPool``, a
+    ``ServeScheduler``)."""
+
+    supervise: bool = True
+    heartbeat_ms: float = 100.0
+
+    def asdict(self) -> dict:
+        return asdict(self)
+
+
+def resolve_supervise_config(
+    *,
+    supervise: Optional[bool] = None,
+    heartbeat_ms: Optional[float] = None,
+) -> SuperviseConfig:
+    """Resolve the liveness-supervision knobs for a *new* runtime instance.
+
+    Same discipline as ``resolve_serve_config``: explicit keyword arguments
+    win over the environment, the environment wins over the defaults,
+    invalid values raise ``ValueError``, and the result is re-read per
+    instance (never frozen at import).
+    """
+    if supervise is None:
+        raw = os.environ.get("RELIC_SUPERVISE")
+        if raw is None or raw == "":
+            supervise = True
+        elif raw.strip().lower() in _TRUTHY:
+            supervise = True
+        elif raw.strip().lower() in _FALSY:
+            supervise = False
+        else:
+            raise ValueError(
+                f"RELIC_SUPERVISE must be one of {_TRUTHY + _FALSY}, "
+                f"got {raw!r}")
+
+    if heartbeat_ms is None:
+        raw = os.environ.get("RELIC_HEARTBEAT_MS")
+        if raw:
+            try:
+                heartbeat_ms = float(raw)
+            except ValueError:
+                raise ValueError(
+                    "RELIC_HEARTBEAT_MS must be a positive number, "
+                    f"got {raw!r}") from None
+        else:
+            heartbeat_ms = 100.0
+    if heartbeat_ms <= 0:
+        raise ValueError(
+            "RELIC_HEARTBEAT_MS must be a positive number, "
+            f"got {heartbeat_ms!r}")
+
+    return SuperviseConfig(supervise=bool(supervise),
+                           heartbeat_ms=float(heartbeat_ms))

@@ -61,8 +61,16 @@ class StragglerMonitor:
         med = self._median(means)
         mad = self._median([abs(m - med) for m in means]) or 1e-9
         worst = max(range(self.n_hosts), key=lambda h: means[h])
+        # A zero median (e.g. synthetic all-zero timings, or sub-resolution
+        # clocks) must not divide: equal-zero means ratio 1.0 (nothing is
+        # slower than anything), a nonzero worst over a zero median is
+        # "infinitely slower".
+        if med:
+            ratio = means[worst] / med
+        else:
+            ratio = 1.0 if means[worst] == 0 else float("inf")
         return StepStats(median=med, mad=mad, worst_host=worst,
-                         worst_ratio=means[worst] / med)
+                         worst_ratio=ratio)
 
     def stragglers(self) -> List[int]:
         st = self.stats()
@@ -117,6 +125,16 @@ def plan_elastic_remesh(mesh_shape: Tuple[int, ...], axes: Tuple[str, ...],
     (each host contributes chips_per_host chips along 'data'). Training
     resumes from the last checkpoint resharded onto the new mesh
     (`repro.checkpoint.elastic_restore`)."""
+    if chips_per_host <= 0:
+        raise ValueError(
+            f"chips_per_host must be positive, got {chips_per_host}")
+    dead = list(dead_hosts)
+    if any(h < 0 for h in dead):
+        raise ValueError(f"dead_hosts must be non-negative, got {dead}")
+    if len(set(dead)) != len(dead):
+        # A duplicated host id is a reporting bug upstream: silently
+        # deduplicating would shed less capacity than the caller asked for.
+        raise ValueError(f"dead_hosts contains duplicates: {dead}")
     if not dead_hosts:
         return ElasticPlan(mesh_shape, mesh_shape, axes, (), restore_step)
     if "data" not in axes:
@@ -130,3 +148,91 @@ def plan_elastic_remesh(mesh_shape: Tuple[int, ...], axes: Tuple[str, ...],
         raise RuntimeError("not enough surviving capacity for the model axes")
     return ElasticPlan(tuple(mesh_shape), tuple(new), tuple(axes),
                        tuple(sorted(set(dead_hosts))), restore_step)
+
+
+class LaneSupervisor:
+    """Progress-heartbeat supervision for a set of Relic lanes.
+
+    The host-scale fault control plane wired to the Relic substrate
+    (ROADMAP: ``fault.py`` was seed code until PR 8): ``RelicPool`` feeds
+    each lane's existing ``_completed`` counter through this on a
+    ``RELIC_HEARTBEAT_MS`` cadence, and the two seed detectors do the rest —
+    :class:`HeartbeatTracker` turns "outstanding work but no progress for a
+    full period" into a *stalled* flag, :class:`StragglerMonitor` turns a
+    persistently slow per-task pace into a *straggler* flag.
+
+    Deliberately passive and lane-agnostic: it holds no lane references,
+    takes plain counter sequences, and never quarantines anything itself —
+    liveness (``Thread.is_alive``) is the pool's own check, because a
+    stalled lane may just be running one long task (which this class flags
+    but cannot distinguish from a wedge; see docs/robustness.md for the
+    failure model). Runs identically under a fake clock in tests.
+    """
+
+    def __init__(self, n_lanes: int, heartbeat_s: float = 0.1,
+                 clock=time.monotonic, window: int = 8, z: float = 4.0,
+                 patience: int = 3):
+        if n_lanes <= 0:
+            raise ValueError(f"n_lanes must be positive, got {n_lanes}")
+        if heartbeat_s <= 0:
+            raise ValueError(
+                f"heartbeat_s must be positive, got {heartbeat_s}")
+        self.n_lanes = n_lanes
+        self.heartbeat_s = heartbeat_s
+        self._clock = clock
+        # Two periods of silence before a lane counts as stalled: the sweep
+        # cadence equals the period, so a one-period timeout would flap on
+        # sampling-phase boundaries.
+        self.tracker = HeartbeatTracker(n_lanes, timeout_s=2 * heartbeat_s,
+                                        clock=clock)
+        self.monitor = StragglerMonitor(n_lanes, window=window, z=z,
+                                        patience=patience)
+        self._completed = [0] * n_lanes
+        self._last_sample_t = clock()
+
+    def observe(self, completed: Sequence[int],
+                outstanding: Sequence[int]) -> bool:
+        """One supervision sweep: given each lane's completion counter and
+        outstanding-task count, feed heartbeats and per-lane pace. Cheap to
+        call often — it samples only once per heartbeat period (returns
+        False when the period has not elapsed)."""
+        now = self._clock()
+        dt = now - self._last_sample_t
+        if dt < self.heartbeat_s:
+            return False
+        self._last_sample_t = now
+        for i in range(self.n_lanes):
+            delta = completed[i] - self._completed[i]
+            self._completed[i] = completed[i]
+            if delta > 0:
+                # Progressing: beat, and record the period's per-task pace
+                # (inverse throughput) for the straggler detector.
+                self.tracker.beat(i, when=now)
+                self.monitor.record(i, dt / delta)
+            elif outstanding[i] <= 0:
+                # Idle is not dead and not slow: beat, record nothing.
+                self.tracker.beat(i, when=now)
+            else:
+                # Outstanding work, zero progress: no beat (the stall
+                # signal), and the whole silent period is its "pace".
+                self.monitor.record(i, dt)
+        return True
+
+    def reset_lane(self, i: int) -> None:
+        """Forget lane ``i``'s history: a respawned lane starts fresh (its
+        completion counter restarts at zero, and inherited strikes would
+        smear the dead predecessor's record onto its replacement)."""
+        self._completed[i] = 0
+        self.tracker.beat(i)
+        self.monitor._hist[i].clear()
+        self.monitor._strikes[i] = 0
+
+    def stalled(self) -> List[int]:
+        """Lanes with outstanding work and no progress for ~2 periods.
+        Advisory: a long task and a wedged assistant look identical here."""
+        return self.tracker.dead()
+
+    def stragglers(self) -> List[int]:
+        """Lanes persistently slower than their peers (median/MAD z-score
+        over per-period pace, ``patience`` consecutive strikes)."""
+        return self.monitor.stragglers()

@@ -37,6 +37,7 @@ from repro.serve.request import (
     STATUS_ERROR,
     STATUS_OK,
 )
+from repro.serve.retry import RetryPolicy
 from repro.serve.scheduler import ServeScheduler
 
 __all__ = [
@@ -48,6 +49,7 @@ __all__ = [
     "RejectedError",
     "Request",
     "Response",
+    "RetryPolicy",
     "STATUS_CANCELLED",
     "STATUS_DEADLINE",
     "STATUS_ERROR",

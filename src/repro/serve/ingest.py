@@ -33,6 +33,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.relic import _PROBE_EVERY_SPINS, RelicDeadError
 from repro.core.spsc import SpscRing
 from repro.runtime.config import (
     ServeConfig,
@@ -67,11 +68,13 @@ class ClientHandle:
         config: ServeConfig,
         wake: Callable[[], None],
         default_deadline_s: Optional[float],
+        consumer_alive: Callable[[], bool] = lambda: True,
     ) -> None:
         self.client_id = client_id
         self._ring = SpscRing(config.queue_depth)
         self._admission = config.admission
         self._wake = wake
+        self._consumer_alive = consumer_alive
         self._default_deadline_s = default_deadline_s
         self._spin_pause_every = resolve_spin_pause_every()
         self._producer_ident: Optional[int] = None
@@ -96,14 +99,20 @@ class ClientHandle:
         *args: Any,
         deadline_s: Optional[float] = None,
         must_admit: bool = False,
+        idempotent: bool = False,
     ) -> Optional[Response]:
         """Enqueue one request; returns its ``Response`` future.
 
         Under the ``reject`` policy a full ring returns ``None`` (or raises
         ``RejectedError`` if ``must_admit``) and counts the rejection.
-        Under ``block`` the call spins until a slot frees.
+        Under ``block`` the call spins until a slot frees — a *bounded*
+        wait: the spin probes the consumer's liveness at the same cadence
+        as the Relic producer slow paths and raises ``RelicDeadError`` if
+        the scheduler loop died (otherwise a full ring plus a dead server
+        would hang the client forever).
         ``deadline_s`` is seconds-from-now; defaults to the configured
-        ``RELIC_SERVE_DEADLINE_MS``.
+        ``RELIC_SERVE_DEADLINE_MS``. ``idempotent=True`` marks the request
+        safe to re-run, opting it into server-side retry.
         """
         self._check_producer()
         if self._closed:
@@ -119,6 +128,7 @@ class ClientHandle:
             args=args,
             arrival_t=arrival,
             deadline_t=None if deadline_s is None else arrival + deadline_s,
+            idempotent=idempotent,
         )
         resp = Response(req)
         ring = self._ring
@@ -130,13 +140,22 @@ class ClientHandle:
                         f"client {self.client_id!r} ring full "
                         f"(depth {ring.capacity})")
                 return None
-            # block: bounded only by the consumer making progress.
+            # block: bounded by the consumer making progress *or* dying.
             spins = 0
             pause_every = self._spin_pause_every
             while not ring.push(resp):
                 spins += 1
                 if spins % pause_every == 0:
                     time.sleep(0)
+                if (spins % _PROBE_EVERY_SPINS == 0
+                        and not self._consumer_alive()):
+                    pending = len(self._ring)
+                    raise RelicDeadError(
+                        lane=f"serve:{self.client_id}",
+                        submitted=self.submitted,
+                        completed=self.submitted - pending,
+                        lost=pending,
+                    )
                 self._wake()
         self.submitted += 1
         self._wake()
@@ -168,9 +187,11 @@ class Ingest:
         self,
         config: Optional[ServeConfig] = None,
         wake: Callable[[], None] = lambda: None,
+        consumer_alive: Callable[[], bool] = lambda: True,
     ) -> None:
         self.config = config or resolve_serve_config()
         self._wake = wake
+        self._consumer_alive = consumer_alive
         self._default_deadline_s = (
             None if self.config.deadline_ms is None
             else self.config.deadline_ms / 1000.0)
@@ -187,7 +208,8 @@ class Ingest:
                     f"client id {client_id!r} already registered")
             handle = ClientHandle(
                 client_id, self.config, self._wake,
-                self._default_deadline_s)
+                self._default_deadline_s,
+                consumer_alive=self._consumer_alive)
             self._by_id[client_id] = handle
             # Publish last: the scheduler iterates self._clients lock-free.
             self._clients.append(handle)

@@ -36,7 +36,13 @@ STATUS_CANCELLED = "cancelled"
 
 @dataclass
 class Request:
-    """One unit of client work: a blocking thunk plus its envelope."""
+    """One unit of client work: a blocking thunk plus its envelope.
+
+    ``idempotent=True`` declares that re-running ``fn`` is safe; only such
+    requests are eligible for server-side retry (task error or lane death
+    — see ``repro.serve.retry``). The server cannot infer this, so the
+    default is the conservative ``False``: fail fast, never re-run.
+    """
 
     rid: int
     client_id: str
@@ -45,6 +51,7 @@ class Request:
     arrival_t: float = 0.0
     deadline_t: Optional[float] = None   # absolute perf_counter deadline
     admit_t: Optional[float] = None      # stamped by the scheduler
+    idempotent: bool = False             # safe to re-run on failure
 
     @staticmethod
     def next_rid() -> int:
@@ -61,6 +68,7 @@ class Response:
     __slots__ = (
         "request", "_done", "status", "value", "error",
         "first_result_t", "complete_t", "_event", "_event_init_lock",
+        "attempts", "_retry_pending", "_retry_error", "_retry_at",
     )
 
     def __init__(self, request: Request) -> None:
@@ -73,6 +81,16 @@ class Response:
         self.complete_t: Optional[float] = None
         self._event: Optional[threading.Event] = None
         self._event_init_lock = threading.Lock()
+        # Retry bookkeeping (repro.serve.retry). A retry-eligible failure
+        # is never published: _execute stores the error and flips
+        # _retry_pending instead of calling _finish, so external waiters
+        # keep waiting on the *same* future across attempts — there is no
+        # reset race because done() never goes True-then-False. attempts
+        # counts executions spent; the loop thread owns these fields.
+        self.attempts = 0
+        self._retry_pending = False
+        self._retry_error: Optional[BaseException] = None
+        self._retry_at = 0.0
 
     # -- completion side (scheduler/assistant threads) --------------------
 

@@ -1,0 +1,176 @@
+"""Unit tests for the fault control plane (repro.runtime.fault).
+
+The seed detectors (StragglerMonitor, HeartbeatTracker) gained load-bearing
+callers in PR 8 — LaneSupervisor feeds them from live RelicPool counters —
+so their edge cases get direct coverage here, under fake clocks so every
+test is deterministic and instant.
+"""
+
+import pytest
+
+from repro.runtime.fault import (
+    HeartbeatTracker,
+    LaneSupervisor,
+    StragglerMonitor,
+    plan_elastic_remesh,
+)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ---------------------------------------------------------------- straggler
+
+
+def test_straggler_stats_zero_median_does_not_divide():
+    # Regression: all-zero step timings (synthetic feeds, sub-resolution
+    # clocks) used to raise ZeroDivisionError computing worst/median.
+    mon = StragglerMonitor(n_hosts=3, window=4)
+    for _ in range(4):
+        mon.record_step([0.0, 0.0, 0.0])
+    st = mon.stats()
+    assert st is not None
+    assert st.median == 0.0
+    assert st.worst_ratio == 1.0
+
+
+def test_straggler_stats_zero_median_nonzero_worst_is_inf():
+    mon = StragglerMonitor(n_hosts=3, window=4)
+    for _ in range(4):
+        mon.record_step([0.0, 0.0, 0.5])
+    st = mon.stats()
+    assert st is not None
+    assert st.median == 0.0
+    assert st.worst_host == 2
+    assert st.worst_ratio == float("inf")
+
+
+def test_straggler_stats_none_until_all_hosts_report():
+    mon = StragglerMonitor(n_hosts=2)
+    mon.record(0, 1.0)
+    assert mon.stats() is None
+    mon.record(1, 1.0)
+    assert mon.stats() is not None
+
+
+# ---------------------------------------------------------------- heartbeat
+
+
+def test_heartbeat_fake_clock_dead_and_revive():
+    clock = FakeClock()
+    hb = HeartbeatTracker(n_hosts=2, timeout_s=1.0, clock=clock)
+    assert hb.dead() == []
+    clock.advance(1.5)
+    assert hb.dead() == [0, 1]
+    hb.beat(0)
+    assert hb.dead() == [1]
+
+
+# ------------------------------------------------------------- elastic plan
+
+
+def test_elastic_plan_rejects_nonpositive_chips_per_host():
+    with pytest.raises(ValueError, match="chips_per_host"):
+        plan_elastic_remesh((8, 4), ("data", "model"), [1], 0, None)
+    with pytest.raises(ValueError, match="chips_per_host"):
+        plan_elastic_remesh((8, 4), ("data", "model"), [1], -2, None)
+
+
+def test_elastic_plan_rejects_negative_hosts():
+    with pytest.raises(ValueError, match="non-negative"):
+        plan_elastic_remesh((8, 4), ("data", "model"), [2, -1], 2, None)
+
+
+def test_elastic_plan_rejects_duplicate_hosts():
+    with pytest.raises(ValueError, match="duplicates"):
+        plan_elastic_remesh((8, 4), ("data", "model"), [1, 1], 2, None)
+
+
+def test_elastic_plan_no_dead_hosts_is_identity():
+    plan = plan_elastic_remesh((8, 4), ("data", "model"), [], 2, 7)
+    assert plan.new_shape == (8, 4)
+    assert plan.dropped_hosts == ()
+    assert plan.restore_step == 7
+
+
+def test_elastic_plan_insufficient_capacity_still_runtime_error():
+    # Interface contract pinned by callers: a *valid* request the cluster
+    # cannot satisfy is an operational error, not a usage error.
+    with pytest.raises(RuntimeError, match="capacity"):
+        plan_elastic_remesh((4, 4), ("data", "model"), [0, 1], 2, None)
+
+
+# ------------------------------------------------------------- supervision
+
+
+def test_lane_supervisor_validates_args():
+    with pytest.raises(ValueError, match="n_lanes"):
+        LaneSupervisor(0)
+    with pytest.raises(ValueError, match="heartbeat_s"):
+        LaneSupervisor(2, heartbeat_s=0.0)
+
+
+def test_lane_supervisor_samples_once_per_period():
+    clock = FakeClock()
+    sup = LaneSupervisor(2, heartbeat_s=1.0, clock=clock)
+    assert sup.observe([0, 0], [0, 0]) is False   # period not elapsed
+    clock.advance(1.0)
+    assert sup.observe([5, 5], [0, 0]) is True
+    assert sup.observe([9, 9], [0, 0]) is False   # same period: ignored
+
+
+def test_lane_supervisor_flags_stalled_lane():
+    clock = FakeClock()
+    sup = LaneSupervisor(2, heartbeat_s=1.0, clock=clock)
+    for step in range(1, 4):
+        clock.advance(1.0)
+        # Lane 0 progresses; lane 1 has outstanding work and never moves.
+        sup.observe([10 * step, 0], [5, 5])
+    assert sup.stalled() == [1]
+
+
+def test_lane_supervisor_idle_is_not_stalled():
+    clock = FakeClock()
+    sup = LaneSupervisor(2, heartbeat_s=1.0, clock=clock)
+    for _ in range(4):
+        clock.advance(1.0)
+        sup.observe([0, 0], [0, 0])   # no progress, but nothing outstanding
+    assert sup.stalled() == []
+
+
+def test_lane_supervisor_flags_persistent_straggler():
+    clock = FakeClock()
+    sup = LaneSupervisor(4, heartbeat_s=1.0, clock=clock, patience=3)
+    completed = [0, 0, 0, 0]
+    flagged = []
+    for _ in range(8):
+        clock.advance(1.0)
+        for i in range(4):
+            completed[i] += 1 if i == 3 else 100   # lane 3: 100x slower pace
+        sup.observe(list(completed), [1, 1, 1, 1])
+        flagged = sup.stragglers()
+    assert flagged == [3]
+
+
+def test_lane_supervisor_reset_lane_clears_history():
+    clock = FakeClock()
+    sup = LaneSupervisor(2, heartbeat_s=1.0, clock=clock)
+    for step in range(1, 4):
+        clock.advance(1.0)
+        sup.observe([10 * step, 0], [5, 5])
+    assert sup.stalled() == [1]
+    sup.reset_lane(1)
+    assert sup.stalled() == []
+    # A respawned lane restarts its counter at zero: the next observation
+    # must not read as a huge negative delta.
+    clock.advance(1.0)
+    sup.observe([40, 3], [5, 0])
+    assert sup.stalled() == []
