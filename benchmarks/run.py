@@ -554,6 +554,208 @@ def run_skew(iters: int, em: Emitter):
                 em.row(key, floor[key], derived)
 
 
+def run_stream(iters: int, em: Emitter):
+    """The streaming-dataflow A/B (PR 9): stencil time-steps expressed
+    three ways over the same work —
+
+    * ``stream/stencil_steps/wavefront/lanes<N>`` — a TaskGraph of G
+      independent 8-sweep chains (one node per single sweep) run in
+      **barriered wavefronts** (``streaming=False``, the PR 6 baseline);
+    * ``stream/stencil_steps/streaming/lanes<N>`` — the *same graph, same
+      scope, same pass* with ``streaming=True``: tasks launch the moment
+      their deps resolve, no global barrier. Carries ``vs_wavefront``
+      (same-pass paired ratio, best pass kept) — the headline: positive at
+      lanes ≥ 2 means dataflow overlap beat lockstep wavefronts;
+    * ``stream/stencil_steps/pipeline/stages4`` — the ``streamed()``
+      variant: a persistent 4-stage sweep-group :class:`Pipeline`, grids
+      flowing through; plus ``.../chunked/lanes<N>`` (the PR 5
+      worksharing shape) and a whole-instance ``Farm`` row for scale.
+
+    ``stream/json_chunks/*`` reruns the shape on the byte-chunk jsondoc
+    stream (stateless classify → stateful scan — work a barriered model
+    cannot phrase at all, since the scan carry crosses chunk boundaries).
+    Everything is oracle-checked on pass 0 before timing; floors +
+    same-pass speedup discipline as the paper table.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks.schedulers import timeit_us_floor
+    from repro.core.schedulers import make_scheduler
+    from repro.stream import Farm, Pipeline
+    from repro.tasks.api import TaskGraph, TaskScope
+    from repro.workloads import make_workload
+    from repro.workloads.stencil import SWEEPS, _np_stencil, stencil_sweep
+
+    passes = 3
+    reps = max(iters // 50, 4)
+    warmup = max(reps // 4, 2)
+    n_grids = 8
+    lane_counts = [1, 2, 4]
+
+    ws = make_workload("stencil", n_instances=n_grids)
+    wj = make_workload("json", n_instances=n_grids)
+
+    # -- the time-step graph: G independent chains of single-sweep nodes --
+    def one_sweep(g):
+        return jax.block_until_ready(stencil_sweep(g, sweeps=1))
+
+    grids, _ = ws._stream_stages(stages=SWEEPS)   # G fresh grids, warmed
+    jax.block_until_ready(stencil_sweep(grids[0], sweeps=1))  # warm 1-sweep
+    graph = TaskGraph()
+    tails = []
+    for i, grid in enumerate(grids):
+        prev = None
+        for s in range(SWEEPS):
+            node = f"g{i}s{s}"
+            if prev is None:
+                graph.task(node, lambda grid=grid: one_sweep(grid))
+            else:
+                graph.task(node, one_sweep, deps=(prev,))
+            prev = node
+        tails.append(prev)
+
+    def check_graph():
+        want = _np_stencil(ws._input())
+        for tail in tails:
+            np.testing.assert_allclose(
+                np.asarray(graph.handle(tail).result()), want,
+                rtol=1e-5, atol=1e-6)
+
+    # -- persistent streamed pipelines (built once, reps flow through) ----
+    s_items, s_fns = ws._stream_stages()                # 4 sweep-group stages
+    j_items, j_fns = wj._stream_stages()                # classify -> scan
+    stencil_pipe = Pipeline(list(s_fns), capacity=16).start()
+    json_pipe = Pipeline(list(j_fns), capacity=32).start()
+    farm_pipe = Pipeline(
+        [Farm(lambda g: jax.block_until_ready(stencil_sweep(g)), workers=2,
+              name="stencil-farm", capacity=16)], capacity=16).start()
+    # Park every persistent network outside its own timing window: an idle
+    # stage spin-waits on its input ring, and three spinning networks
+    # contending for the GIL would tax every *other* row's measurement.
+    for _pipe in (stencil_pipe, json_pipe, farm_pipe):
+        _pipe.pause()
+
+    floor: dict = {}
+    speedup: dict = {}
+    vs_wave: dict = {}
+    try:
+        with TaskScope(make_scheduler("serial")) as serial_scope:
+            for p in range(passes):
+                # serial baseline: the same graph, inline wavefronts
+                if p == 0:
+                    graph.run(serial_scope)
+                    check_graph()
+                us_serial = timeit_us_floor(
+                    lambda: graph.run(serial_scope), reps, warmup, rounds=3)
+                key = "stream/stencil_steps/serial"
+                floor[key] = min(floor.get(key, float("inf")), us_serial)
+
+                for lanes in lane_counts:
+                    sched = make_scheduler("relic-pool", lanes=lanes)
+                    with TaskScope(sched) as scope:
+                        def run_wave(scope=scope):
+                            return graph.run(scope, streaming=False)
+
+                        def run_streaming(scope=scope):
+                            return graph.run(scope, streaming=True)
+
+                        if p == 0:
+                            run_wave()
+                            check_graph()
+                            run_streaming()
+                            check_graph()
+                        us_w = timeit_us_floor(run_wave, reps, warmup,
+                                               rounds=3)
+                        us_s = timeit_us_floor(run_streaming, reps, warmup,
+                                               rounds=3)
+                        kw = f"stream/stencil_steps/wavefront/lanes{lanes}"
+                        ks = f"stream/stencil_steps/streaming/lanes{lanes}"
+                        floor[kw] = min(floor.get(kw, float("inf")), us_w)
+                        floor[ks] = min(floor.get(ks, float("inf")), us_s)
+                        speedup[kw] = max(speedup.get(kw, 0.0),
+                                          us_serial / us_w)
+                        speedup[ks] = max(speedup.get(ks, 0.0),
+                                          us_serial / us_s)
+                        vs_wave[ks] = max(vs_wave.get(ks, -1.0),
+                                          us_w / us_s)  # same-pass pairing
+
+                        def run_chunked(scope=scope):
+                            return ws.chunked(scope, grain=1)
+
+                        if p == 0:
+                            ws.check(run_chunked())
+                        kc = f"stream/stencil_steps/chunked/lanes{lanes}"
+                        us_c = timeit_us_floor(run_chunked, reps, warmup,
+                                               rounds=3)
+                        floor[kc] = min(floor.get(kc, float("inf")), us_c)
+                        speedup[kc] = max(speedup.get(kc, 0.0),
+                                          us_serial / us_c)
+
+                # streamed() pipeline + farm rows (persistent networks)
+                for key, pipe, items, check in (
+                        (f"stream/stencil_steps/pipeline/stages{len(s_fns)}",
+                         stencil_pipe, s_items,
+                         lambda out: ws.check(ws._stream_collect(out))),
+                        ("stream/stencil_steps/farm/workers2",
+                         farm_pipe, list(grids),
+                         lambda out: [np.testing.assert_allclose(
+                             np.asarray(o), _np_stencil(ws._input()),
+                             rtol=1e-5, atol=1e-6) for o in out])):
+                    pipe.resume()
+                    if p == 0:
+                        check(pipe.run(items))
+                    us_p = timeit_us_floor(lambda: pipe.run(items),
+                                           reps, warmup, rounds=3)
+                    pipe.pause()
+                    floor[key] = min(floor.get(key, float("inf")), us_p)
+                    speedup[key] = max(speedup.get(key, 0.0),
+                                       us_serial / us_p)
+
+                # the jsondoc byte-chunk stream
+                if p == 0:
+                    wj.check(wj.serial())
+                us_js = timeit_us_floor(wj.serial, reps, warmup, rounds=3)
+                key = "stream/json_chunks/serial"
+                floor[key] = min(floor.get(key, float("inf")), us_js)
+                json_pipe.resume()
+                if p == 0:
+                    wj.check(wj._stream_collect(json_pipe.run(j_items)))
+                us_jp = timeit_us_floor(lambda: json_pipe.run(j_items),
+                                        reps, warmup, rounds=3)
+                json_pipe.pause()
+                key = "stream/json_chunks/pipeline"
+                floor[key] = min(floor.get(key, float("inf")), us_jp)
+                speedup[key] = max(speedup.get(key, 0.0), us_js / us_jp)
+    finally:
+        stencil_pipe.close()
+        json_pipe.close()
+        farm_pipe.close()
+
+    em.header("stream: dataflow streaming vs barriered wavefronts "
+              f"(stencil: {n_grids} grids x {SWEEPS} single-sweep chained "
+              f"tasks, same graph/scope A-B; json: byte-chunk "
+              f"classify->scan; oracle-checked; floors + best same-pass "
+              f"speedups over {passes} passes)")
+    em.row("stream/stencil_steps/serial", floor["stream/stencil_steps/serial"],
+           f"n={n_grids};sweeps={SWEEPS};speedup=1.000;oracle=ok")
+    for lanes in lane_counts:
+        kw = f"stream/stencil_steps/wavefront/lanes{lanes}"
+        ks = f"stream/stencil_steps/streaming/lanes{lanes}"
+        kc = f"stream/stencil_steps/chunked/lanes{lanes}"
+        em.row(kw, floor[kw], f"speedup={speedup[kw]:.3f};oracle=ok")
+        em.row(ks, floor[ks], f"speedup={speedup[ks]:.3f};oracle=ok;"
+                              f"vs_wavefront={vs_wave[ks] - 1:+.1%}")
+        em.row(kc, floor[kc], f"speedup={speedup[kc]:.3f};oracle=ok")
+    for key in (f"stream/stencil_steps/pipeline/stages{len(s_fns)}",
+                "stream/stencil_steps/farm/workers2"):
+        em.row(key, floor[key], f"speedup={speedup[key]:.3f};oracle=ok")
+    em.row("stream/json_chunks/serial", floor["stream/json_chunks/serial"],
+           f"n={n_grids};chunk={wj.stream_chunk};speedup=1.000;oracle=ok")
+    em.row("stream/json_chunks/pipeline", floor["stream/json_chunks/pipeline"],
+           f"speedup={speedup['stream/json_chunks/pipeline']:.3f};oracle=ok")
+
+
 def load_baseline(path: str) -> dict:
     """Read and validate a --compare baseline BENCH file. Called *before*
     the benchmark sections run, so a missing/corrupt path fails in
@@ -898,6 +1100,7 @@ SECTION_RUNNERS = {
     "serve": run_serve,
     "faults": run_faults,
     "roofline": run_roofline,
+    "stream": run_stream,
 }
 SECTIONS = list(SECTION_RUNNERS)
 

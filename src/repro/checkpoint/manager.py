@@ -5,9 +5,13 @@ Design (1000+ node posture, see docs/schedulers.md for the substrate layer):
     a manifest is the last file written, so a partially-written checkpoint is
     never restorable.
   * asynchronous: serialization to host memory happens on the main thread
-    (cheap `jax.device_get`), the file I/O runs on the **Relic assistant**
-    (`wake_up_hint` before the save window, `sleep_hint` after) — training
-    continues while bytes hit disk. This is a production use of the paper's
+    (cheap `jax.device_get`), then the save flows through a two-stage
+    streaming pipeline (`repro.stream`): a **serialize** stage writes the
+    tmp dir, a **publish** stage atomically renames and GCs — so
+    back-to-back `save()` calls overlap (save N+1 serializes while save N
+    publishes) instead of serializing behind a lock, and training
+    continues while bytes hit disk (`wake_up_hint` before the save
+    window, `sleep_hint` after). This is a production use of the paper's
     API, not a demo.
   * retention: keep the newest ``keep`` checkpoints.
   * restore: latest valid manifest wins; arrays are `device_put` with the
@@ -23,16 +27,16 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 import time
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.schedulers import Scheduler
-from repro.tasks.api import TaskScope
+from repro.stream import Pipeline, Stage, StreamFailure
+from repro.tasks.api import TaskGroupError
 
 MANIFEST = "manifest.json"
 
@@ -58,9 +62,20 @@ def _unflat_into(template, flat: dict):
 class CheckpointManager:
     """``scheduler`` selects the host-overlap substrate for async saves: a
     ``repro.core.schedulers`` registry name or a not-yet-started
-    ``Scheduler`` instance (default: the paper's Relic runtime). Async
-    writes run inside a long-lived :class:`repro.tasks.api.TaskScope`
-    whose ``barrier()`` (see :meth:`wait`) closes each save window."""
+    ``Scheduler`` instance (default: the paper's Relic runtime).
+
+    Async saves flow through a 2-stage :class:`repro.stream.Pipeline`
+    (serialize → publish). A registry name hosts each stage on its own
+    assistant, so consecutive saves overlap; an instance substrate fuses
+    both stages onto its single worker; ``"serial"`` (or ``async_=False``)
+    writes synchronously on the caller. Each in-flight save serializes
+    into a *sequence-unique* tmp dir (``step_<n>.tmp-<seq>``), so two
+    overlapped saves of the same step never collide; the publish stage is
+    the single FIFO owner of rename + GC, preserving the atomicity
+    invariant (manifest last, ``os.replace`` to the final name) without
+    the old ``_write_lock`` — one owner per resource instead of one lock
+    around all of them.
+    """
 
     def __init__(self, directory: str | Path, keep: int = 3,
                  async_: bool = True, scheduler: "str | Scheduler" = "relic"):
@@ -68,41 +83,62 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_ = async_
-        # _write/_gc assume one writer at a time; multi-worker substrates
-        # (pool) could otherwise interleave two saves on the same paths.
-        self._write_lock = threading.Lock()
-        self._scope: Optional[TaskScope] = None
+        self._seq = 0          # distinguishes overlapped tmp dirs
+        self._pending = 0      # saves fed but not yet collected by wait()
+        self._pipe: Optional[Pipeline] = None
         if async_:
-            self._scope = TaskScope(scheduler)
-            self._scope.sleep_hint()   # park until the first save window
+            if isinstance(scheduler, str):
+                nodes = [
+                    Stage(self._serialize, name="ckpt-serialize",
+                          capacity=4, substrate=scheduler),
+                    Stage(self._publish, name="ckpt-publish",
+                          capacity=4, substrate=scheduler),
+                ]
+            else:
+                def serialize_publish(item: tuple) -> int:
+                    return self._publish(self._serialize(item))
+                nodes = [Stage(serialize_publish, name="ckpt-write",
+                               capacity=4, substrate=scheduler)]
+            self._pipe = Pipeline(nodes, capacity=4).start()
+            self._pipe.pause()   # park until the first save window
 
     # ------------------------------------------------------------------ save
 
     def save(self, state, step: int, *, block: bool = False) -> None:
         host = {k: np.asarray(jax.device_get(v))
                 for k, v in _flat(state).items()}
-        if self._scope is not None:
-            self._scope.wake_up_hint()
-            self._scope.submit(self._write, host, step)
+        seq = self._seq
+        self._seq += 1
+        if self._pipe is not None:
+            self._pipe.resume()
+            self._pipe.put((seq, host, step))
+            self._pending += 1
             if block:
                 self.wait()
         else:
-            self._write(host, step)
+            self._publish(self._serialize((seq, host, step)))
 
     def wait(self) -> None:
-        """Barrier on outstanding writes; re-raises write errors (several
-        failed saves surface together as ``TaskGroupError``)."""
-        if self._scope is not None:
-            self._scope.barrier()
-            self._scope.sleep_hint()
+        """Drain outstanding saves; re-raises write errors (several failed
+        saves surface together as ``TaskGroupError``)."""
+        if self._pipe is None:
+            return
+        errors: List[BaseException] = []
+        while self._pending:
+            out = self._pipe.get_raw()
+            self._pending -= 1
+            if type(out) is StreamFailure:
+                errors.append(out.error)
+        self._pipe.pause()
+        if len(errors) == 1:
+            raise errors[0]
+        if errors:
+            raise TaskGroupError(errors)
 
-    def _write(self, host: dict, step: int) -> None:
-        with self._write_lock:
-            self._write_locked(host, step)
-
-    def _write_locked(self, host: dict, step: int) -> None:
-        tmp = self.dir / f"step_{step:08d}.tmp"
-        final = self.dir / f"step_{step:08d}"
+    def _serialize(self, item: tuple) -> tuple:
+        """Stage 1: write the tmp dir (the byte-heavy half of a save)."""
+        seq, host, step = item
+        tmp = self.dir / f"step_{step:08d}.tmp-{seq}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
@@ -118,14 +154,24 @@ class CheckpointManager:
         manifest = {"step": step, "time": time.time(), "entries": entries,
                     "hosts": 1}
         (tmp / MANIFEST).write_text(json.dumps(manifest))
+        return (step, tmp)
+
+    def _publish(self, item: tuple) -> int:
+        """Stage 2: atomic rename + retention GC. Saves pass through here
+        in submission order (the pipeline is FIFO), and this stage is the
+        sole toucher of final names — the one-writer invariant the old
+        ``_write_lock`` bought, now held structurally."""
+        step, tmp = item
+        final = self.dir / f"step_{step:08d}"
         if final.exists():  # idempotent re-save of the same step
             shutil.rmtree(final)
         os.replace(tmp, final)  # atomic publish
         self._gc()
+        return step
 
     def _gc(self) -> None:
         done = sorted(p for p in self.dir.glob("step_*")
-                      if not p.name.endswith(".tmp"))
+                      if ".tmp" not in p.name)
         for p in done[: -self.keep] if self.keep else []:
             shutil.rmtree(p, ignore_errors=True)
 
@@ -134,7 +180,7 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = []
         for p in sorted(self.dir.glob("step_*")):
-            if p.name.endswith(".tmp") or not (p / MANIFEST).exists():
+            if ".tmp" in p.name or not (p / MANIFEST).exists():
                 continue
             steps.append(int(p.name.split("_")[1]))
         return max(steps) if steps else None
@@ -168,9 +214,9 @@ class CheckpointManager:
         return _unflat_into(template, out), step
 
     def close(self) -> None:
-        if self._scope is not None:
+        if self._pipe is not None:
             try:
-                self._scope.barrier()   # surfaces pending write errors
+                self.wait()             # surfaces pending write errors
             finally:
-                self._scope.close()     # but never leaks the worker thread
-                self._scope = None
+                pipe, self._pipe = self._pipe, None
+                pipe.close()            # but never leaks the worker threads

@@ -13,16 +13,13 @@ state needs checkpointing beyond the step counter.
 
 from __future__ import annotations
 
-import threading
-import time
 from dataclasses import dataclass
 from typing import Callable, Iterator, Optional
 
 import numpy as np
 
 from repro.core.schedulers import Scheduler
-from repro.core.spsc import SpscRing
-from repro.tasks.api import TaskScope
+from repro.stream import Pipeline, Stage, StreamFailure
 
 
 @dataclass(frozen=True)
@@ -81,36 +78,37 @@ class MemmapLM:
         }
 
 
-class _ProduceFailure:
-    """Marker pushed through the ring when batch production raised; the
-    error surfaces at ``next_batch()`` for that index instead of hanging
-    the consumer on a batch that will never arrive."""
-
-    __slots__ = ("error",)
-
-    def __init__(self, error: BaseException):
-        self.error = error
-
-
 class PrefetchPipeline:
-    """SPSC-prefetched batch stream driven by a scheduling substrate.
+    """Prefetched batch stream, built as a 2-stage streaming pipeline.
 
-    Host-side overlap defaults to the paper's Relic runtime but accepts any
-    substrate from ``repro.core.schedulers`` — a registry name
-    (``"relic"``, ``"spin"``, ``"condvar"``, ``"pool"``, ``"serial"``) or a
-    not-yet-started ``Scheduler`` instance. ``"serial"`` degrades to
-    synchronous on-demand batch production (no worker thread), which is the
-    right fallback where spawning threads is undesirable.
+    Since PR 9 this is a thin consumer of :class:`repro.stream.Pipeline`:
+    batch *indices* flow in, batches flow out, through a ``produce`` stage
+    (``source.batch(i)``) and — when a ``transform`` is given — a second
+    ``transform`` stage whose work overlaps production of the next batch.
+    Every ring in the network is strictly 1P1C by construction, which is
+    why the old ``_push_lock`` no longer exists: that lock only served to
+    serialize multi-worker pool substrates racing on one hand-rolled ring,
+    a shape the per-stage 1P1C composition makes structurally impossible.
 
-    Batches are delivered strictly in index order on *every* substrate:
-    arrivals are staged by index and released sequentially, so even the
-    multi-worker ``"pool"`` substrate (which may finish production out of
-    order) preserves the determinism/restart contract above.
+    Substrates: a registry name gives each stage its own assistant
+    (``"serial"`` degrades to synchronous on-demand production, no worker
+    thread); a ``Scheduler`` *instance* fuses produce+transform into one
+    stage hosted on it. Batches are delivered strictly in index order on
+    *every* substrate — the linear pipeline is FIFO end-to-end, so no
+    index stash is needed either.
 
-    Production runs inside a long-lived :class:`repro.tasks.api.TaskScope`
-    (the structured tasking façade) rather than on raw scheduler
-    submit/wait; ``_produce`` handles its own failures in-stream (see
-    ``_ProduceFailure``), so the scope's error aggregation stays empty.
+    Supervision (PR 8 discipline, closing the PR 8 gap in this file):
+    every wait — consumer pops in ``next_batch()``, producer pushes on a
+    full ring — is bounded, probing the neighbouring thread's liveness
+    every ``_PROBE_EVERY_SPINS`` spins and raising
+    :class:`repro.core.relic.RelicDeadError` with fed/drained diagnostics
+    instead of spinning on a stream that can never advance
+    (``RELIC_SUPERVISE=0`` opts out, same switch as the substrate).
+
+    Failures stay in-stream: a batch whose production (or transform)
+    raised arrives as a marker and ``next_batch()`` raises
+    ``RuntimeError("batch {i} production failed")`` chaining the original
+    error — the contract ``tests/test_schedulers_conformance.py`` pins.
     """
 
     def __init__(self, source, dc: DataConfig, start_index: int = 0,
@@ -120,36 +118,14 @@ class PrefetchPipeline:
         self.dc = dc
         self._next_submit = start_index
         self._next_consume = start_index
-        self._stash: dict = {}   # out-of-order arrivals, keyed by index
         self._transform = transform
-        self._ring = SpscRing(dc.prefetch)
         self._scheduler_spec = scheduler
-        self._scope: Optional[TaskScope] = None
+        self._pipe: Optional[Pipeline] = None
         self._started = False
         self._stopping = False
-        # The batch ring is SPSC by design; multi-worker substrates (pool)
-        # would race on push, so producers serialize on this lock. For the
-        # single-assistant substrates it is uncontended.
-        self._push_lock = threading.Lock()
 
-    # -- assistant-side task ------------------------------------------------
-    def _produce(self, index: int) -> None:
-        try:
-            batch = self.source.batch(index)
-            if self._transform is not None:
-                batch = self._transform(batch)
-        except BaseException as e:
-            # Deliver the failure in-stream: the consumer would otherwise
-            # spin forever on a batch that will never arrive.
-            batch = _ProduceFailure(e)
-        while True:
-            with self._push_lock:
-                pushed = self._ring.push((index, batch))
-            if pushed:
-                return
-            if self._stopping:
-                return  # consumer is gone; drop instead of spinning forever
-            time.sleep(0)  # bounded queue backpressure
+    def _produce(self, index: int) -> dict:
+        return self.source.batch(index)
 
     # -- main-thread API ----------------------------------------------------
     def start(self) -> "PrefetchPipeline":
@@ -161,49 +137,68 @@ class PrefetchPipeline:
                     "PrefetchPipeline cannot restart after stop(); build a "
                     "new pipeline with start_index at the resume point")
             spec = self._scheduler_spec
-            if isinstance(spec, str):
-                self._scope = TaskScope(spec, capacity=self.dc.prefetch)
+            cap = self.dc.prefetch
+            if isinstance(spec, str) and self._transform is not None:
+                # Two stages, two assistants: transform overlaps produce.
+                nodes = [
+                    Stage(self._produce, name="produce", capacity=cap,
+                          substrate=spec),
+                    Stage(self._transform, name="transform", capacity=cap,
+                          substrate=spec),
+                ]
+            elif isinstance(spec, str):
+                nodes = [Stage(self._produce, name="produce", capacity=cap,
+                               substrate=spec)]
             else:
-                self._scope = TaskScope(spec)
-            self._scope.wake_up_hint()
-            for _ in range(self.dc.prefetch):
-                self._scope.submit(self._produce, self._next_submit)
+                # One Scheduler instance hosts one loop: fuse the stages.
+                def produce_transform(index: int) -> dict:
+                    batch = self.source.batch(index)
+                    if self._transform is not None:
+                        batch = self._transform(batch)
+                    return batch
+                nodes = [Stage(produce_transform, name="produce",
+                               capacity=cap, substrate=spec)]
+            self._pipe = Pipeline(nodes, capacity=cap).start()
+            self._pipe.resume()
+            # The consumer-facing batch ring (depth-pinned by tests): the
+            # streaming network's sink. In inline (serial) mode outputs
+            # buffer in a deque instead and the ring stays empty.
+            self._ring = self._pipe.sink_ring
+            # Prime the window: keep `prefetch` indices in flight.
+            for _ in range(cap):
+                self._pipe.put(self._next_submit)
                 self._next_submit += 1
             self._started = True
         return self
 
     def next_batch(self) -> dict:
         assert self._started, "call start() first"
-        while self._next_consume not in self._stash:
-            item = self._ring.pop()
-            if item is None:
-                time.sleep(0)
-                continue
-            self._stash[item[0]] = item[1]
-        batch = self._stash.pop(self._next_consume)
+        # Bounded wait: get_raw probes the producing stage's liveness and
+        # raises RelicDeadError if its assistant died mid-stream.
+        batch = self._pipe.get_raw()
+        index = self._next_consume
         self._next_consume += 1
         # keep the assistant one window ahead
-        self._scope.submit(self._produce, self._next_submit)
+        self._pipe.put(self._next_submit)
         self._next_submit += 1
-        if isinstance(batch, _ProduceFailure):
+        if type(batch) is StreamFailure:
             raise RuntimeError(
-                f"batch {self._next_consume - 1} production failed"
-            ) from batch.error
+                f"batch {index} production failed") from batch.error
         return batch
 
     def pause(self) -> None:
         """Between parallelizable sections (paper's sleep_hint)."""
-        if self._scope is not None:
-            self._scope.sleep_hint()
+        if self._pipe is not None:
+            self._pipe.pause()
 
     def resume(self) -> None:
-        if self._scope is not None:
-            self._scope.wake_up_hint()
+        if self._pipe is not None:
+            self._pipe.resume()
 
     def stop(self) -> None:
         if self._started:
-            self._stopping = True  # unblock producers stuck on a full ring
-            self._scope.close()
+            self._stopping = True
+            self._pipe.close()   # flows STOP, drains leftovers, joins
             self._started = False
 
     def __iter__(self) -> Iterator[dict]:

@@ -1,0 +1,339 @@
+"""Task farm: FastFlow's emitter → N workers → collector over SPSC rings.
+
+A farm parallelizes ONE stage across N worker assistants while keeping
+every ring 1P1C (Aldinucci et al., 2009 — no MPMC queue appears even
+though N workers share the load):
+
+* the **emitter** assistant is the sole consumer of the farm's input ring
+  and the sole producer of each worker's private input ring (N rings, one
+  producer each);
+* each **worker** assistant (a plain :class:`Stage` wrapping the farm fn)
+  is the sole consumer of its input ring and sole producer of its output
+  ring;
+* the **collector** assistant is the sole consumer of every worker output
+  ring and the sole producer of the farm's output ring.
+
+The emitter deals round-robin with a skip-if-full scan (a full — i.e.
+slow — worker loses its turn instead of stalling the whole farm; the
+bounded wait only engages when *every* worker ring is full). The emitter
+tags each item with a sequence number; with ``ordered=True`` (default)
+the collector releases results in exactly input order using the same
+index-stash pattern ``PrefetchPipeline`` used for its in-order window —
+out-of-order results park in a dict keyed by sequence until their turn.
+``ordered=False`` releases in completion order (lower latency, no stash).
+
+Failure semantics are fail-stop per assistant, like Relic: an item whose
+fn raised becomes an in-stream :class:`StreamFailure` (the farm keeps
+going), but a *dead worker assistant* (non-``Exception`` escape, killed
+thread) is unrecoverable — the collector's bounded wait detects it,
+drains what the worker already published, and raises
+:class:`RelicDeadError`, which cascades through the liveness probes to
+the driver.
+
+A ``Farm`` presents the same node interface as :class:`Stage`, so it
+drops into a :class:`repro.stream.Pipeline` anywhere a stage fits
+(``Pipeline([pre, Farm(heavy, workers=4), post])``).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional
+
+from repro.core.relic import RelicDeadError
+from repro.core.spsc import DEFAULT_CAPACITY, SpscRing
+from repro.stream.stage import (STOP, Stage, StreamFailure, StreamUsageError,
+                                _always_alive)
+
+__all__ = ["Farm"]
+
+
+class _Emitter(Stage):
+    """Deals tagged items round-robin into the worker input rings."""
+
+    def __init__(self, farm: "Farm", **kwargs: Any):
+        super().__init__(None, name=f"{farm.name}-emit", **kwargs)
+        self._farm = farm
+
+    def _run_loop(self) -> None:
+        farm = self._farm
+        pop = self._in.pop
+        rings = farm._worker_in
+        workers = farm._workers
+        n = len(rings)
+        probe_every = self._probe_every
+        pause_every = self._pause_every
+        rr = 0
+        seq = 0
+        spins = 0
+        while True:
+            item = pop()
+            if item is None:
+                spins += 1
+                if self._parked:
+                    time.sleep(200e-6)    # parked idle (see Stage.sleep_hint)
+                elif spins % pause_every == 0:
+                    time.sleep(0)
+                if not (probe_every and spins % probe_every == 0):
+                    continue
+                if self._upstream_alive():
+                    continue
+                item = pop()
+                if item is None:
+                    raise self._dead_upstream()
+            spins = 0
+            if item is STOP:
+                for i in range(n):
+                    self._broadcast_stop(rings[i], workers[i])
+                return
+            self.items_in += 1
+            payload = (seq, item)
+            seq += 1
+            # Skip-if-full deal: first ring with space starting at rr.
+            wait_spins = 0
+            while True:
+                placed = False
+                for k in range(n):
+                    i = (rr + k) % n
+                    if rings[i].push(payload):
+                        rr = i + 1
+                        placed = True
+                        break
+                if placed:
+                    break
+                wait_spins += 1
+                if wait_spins % pause_every == 0:
+                    time.sleep(0)
+                if (probe_every and wait_spins % probe_every == 0
+                        and not any(w.alive() for w in workers)):
+                    raise RelicDeadError(
+                        f"farm {farm.name!r}: every worker is dead",
+                        self.items_in, self.items_out,
+                        self.items_in - self.items_out)
+            self.items_out += 1
+
+    def _broadcast_stop(self, ring: SpscRing, worker: Stage) -> None:
+        if ring.push(STOP):
+            return
+        spins = 0
+        while True:
+            spins += 1
+            if spins % self._pause_every == 0:
+                time.sleep(0)
+            if (self._probe_every and spins % self._probe_every == 0
+                    and not worker.alive()):
+                return      # dead worker: the collector's probe accounts it
+            if ring.push(STOP):
+                return
+
+
+class _Collector(Stage):
+    """Merges worker outputs; optional in-order release by sequence."""
+
+    def __init__(self, farm: "Farm", **kwargs: Any):
+        super().__init__(None, name=f"{farm.name}-collect", **kwargs)
+        self._farm = farm
+
+    def _run_loop(self) -> None:
+        farm = self._farm
+        workers = farm._workers
+        outs = [w.out_ring for w in workers]
+        n = len(outs)
+        ordered = farm.ordered
+        probe_every = self._probe_every
+        pause_every = self._pause_every
+        stops = [False] * n
+        remaining = n
+        stash: dict = {}
+        next_rel = 0
+        spins = 0
+
+        def release(item: Any) -> None:
+            nonlocal next_rel
+            seq, payload = item
+            self.items_in += 1
+            if ordered:
+                stash[seq] = payload
+                while next_rel in stash:
+                    self._push_out(stash.pop(next_rel))
+                    next_rel += 1
+                    self.items_out += 1
+            else:
+                self._push_out(payload)
+                self.items_out += 1
+
+        while remaining:
+            progress = False
+            for i in range(n):
+                if stops[i]:
+                    continue
+                item = outs[i].pop()
+                if item is None:
+                    continue
+                progress = True
+                if item is STOP:
+                    stops[i] = True
+                    remaining -= 1
+                else:
+                    release(item)
+            if progress:
+                spins = 0
+                continue
+            spins += 1
+            if self._parked:
+                time.sleep(200e-6)        # parked idle (see Stage.sleep_hint)
+            elif spins % pause_every == 0:
+                time.sleep(0)
+            if not (probe_every and spins % probe_every == 0):
+                continue
+            for i in range(n):
+                if stops[i] or workers[i].alive():
+                    continue
+                item = outs[i].pop()   # racing final publication
+                if item is STOP:
+                    stops[i] = True
+                    remaining -= 1
+                elif item is not None:
+                    release(item)
+                else:
+                    raise RelicDeadError(
+                        f"farm {farm.name!r} worker {workers[i].name!r}",
+                        self.items_in, self.items_out, len(stash))
+        if stash:
+            # Unreachable with live workers: sequence gaps only arise from
+            # a dead worker, which raised above. Fail loudly over silently
+            # reordering.
+            raise RelicDeadError(
+                f"farm {farm.name!r}: {len(stash)} items lost in-flight",
+                self.items_in, self.items_out, len(stash))
+        self._push_out(STOP)
+
+
+class Farm:
+    """Emitter → ``workers`` parallel stages → collector, as one node.
+
+    ``fn`` is applied to each item by whichever worker the emitter dealt
+    it to; ``ordered`` controls collector release order (input order vs
+    completion order). ``substrate`` must be a registry *name* — a farm
+    hosts ``workers + 2`` loops, so each gets its own instance; a single
+    ``Scheduler`` instance cannot be shared (wrap the fn in a plain
+    ``Stage`` for that). With a ``workers=0`` substrate the enclosing
+    Pipeline runs the farm inline (``fn`` applied directly).
+    """
+
+    def __init__(self, fn: Callable[[Any], Any], *, workers: int = 2,
+                 name: Optional[str] = None,
+                 capacity: int = DEFAULT_CAPACITY,
+                 substrate: str = "relic", ordered: bool = True,
+                 record: bool = False):
+        if not isinstance(substrate, str):
+            raise StreamUsageError(
+                "Farm needs a substrate registry name (it hosts "
+                f"workers+2 assistant loops), got {type(substrate).__name__}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", None) or "farm"
+        self.capacity = capacity
+        self.ordered = ordered
+        self._emitter = _Emitter(self, capacity=1, substrate=substrate)
+        self._workers: List[Stage] = [
+            Stage(self._work, name=f"{self.name}-w{i}", capacity=capacity,
+                  substrate=substrate, record=record)
+            for i in range(workers)
+        ]
+        self._worker_in: List[SpscRing] = [SpscRing(capacity)
+                                           for _ in range(workers)]
+        self._collector = _Collector(self, capacity=capacity,
+                                     substrate=substrate)
+        self._collector.connect(SpscRing(1), _always_alive)  # loop is custom
+        for w, ring in zip(self._workers, self._worker_in):
+            w.connect(ring, self._emitter.alive)
+            w.set_downstream_alive(self._collector.alive)
+        self._all = [self._emitter, *self._workers, self._collector]
+        self.workers = 0 if any(s.workers == 0 for s in self._all) else 1
+        self.record = record
+
+    def _work(self, tagged: tuple) -> tuple:
+        seq, item = tagged
+        if type(item) is StreamFailure:
+            return tagged               # upstream failure: pass through
+        try:
+            return (seq, self.fn(item))
+        except Exception as e:
+            return (seq, StreamFailure(e, self.name))
+
+    # -- node interface (same shape as Stage) ------------------------------
+    @property
+    def out_ring(self) -> SpscRing:
+        return self._collector.out_ring
+
+    @property
+    def items_in(self) -> int:
+        return self._emitter.items_in
+
+    @items_in.setter
+    def items_in(self, v: int) -> None:        # inline-mode accounting
+        self._emitter.items_in = v
+
+    @property
+    def items_out(self) -> int:
+        return self._collector.items_out
+
+    @items_out.setter
+    def items_out(self, v: int) -> None:
+        self._collector.items_out = v
+
+    def connect(self, in_ring: SpscRing, upstream_alive) -> None:
+        self._emitter.connect(in_ring, upstream_alive)
+
+    def set_downstream_alive(self, probe) -> None:
+        self._collector.set_downstream_alive(probe)
+
+    def start(self) -> "Farm":
+        # Sink-first (collector, workers, emitter) so every probe target
+        # is already running when its prober's loop begins.
+        self._collector.start()
+        for w in self._workers:
+            w.start()
+        self._emitter.start()
+        return self
+
+    def alive(self) -> bool:
+        return self._collector.alive()
+
+    def error(self) -> Optional[BaseException]:
+        for s in (self._collector, *self._workers, self._emitter):
+            e = s.error()
+            if e is not None:
+                return e
+        return None
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for s in self._all:
+            s.join(timeout)
+
+    def close(self) -> None:
+        for s in self._all:
+            s.close()
+
+    def sleep_hint(self) -> None:
+        for s in self._all:
+            s.sleep_hint()
+
+    def wake_up_hint(self) -> None:
+        for s in self._all:
+            s.wake_up_hint()
+
+    def stats(self) -> dict:
+        return {
+            "name": self.name,
+            "items_in": self.items_in,
+            "items_out": self.items_out,
+            "ordered": self.ordered,
+            "workers": [w.stats() for w in self._workers],
+        }
+
+    def __repr__(self) -> str:
+        return (f"Farm({self.name!r}, workers={len(self._workers)}, "
+                f"ordered={self.ordered})")

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.core.schedulers import (USAGE_ERRORS, Scheduler,
@@ -601,15 +602,33 @@ class TaskGraph:
         return self._nodes[name].handle
 
     def run(self, scope: Union[TaskScope, str, Scheduler] = "relic",
+            streaming: bool = False,
             **scope_kwargs: Any) -> Dict[str, Any]:
-        """Execute the graph; returns ``{name: result}``."""
+        """Execute the graph; returns ``{name: result}``.
+
+        ``streaming=False`` (the baseline) runs barriered wavefronts:
+        stage N+1 starts only after *all* of stage N joined.
+        ``streaming=True`` runs the dataflow executor: each task is
+        submitted the moment its own dependencies complete, so items flow
+        through ready stages while unrelated upstream tasks are still
+        producing — no wavefront barrier on the critical path. Results,
+        error aggregation and cancellation semantics are identical
+        (pinned by ``tests/test_stream.py``); only the join structure
+        differs, which is what the ``stream`` benchmark section A/Bs.
+        """
+        runner = self._run_streaming if streaming else self._run
         if isinstance(scope, TaskScope):
             if scope_kwargs:
                 raise TypeError("scope kwargs only apply when run() builds "
                                 "the TaskScope itself")
-            return self._run(scope)
+            return runner(scope)
         with TaskScope(scope, **scope_kwargs) as s:
-            return self._run(s)
+            return runner(s)
+
+    def as_stream(self, scope: Union[TaskScope, str, Scheduler] = "relic",
+                  **scope_kwargs: Any) -> Dict[str, Any]:
+        """Alias for ``run(scope, streaming=True)``."""
+        return self.run(scope, streaming=True, **scope_kwargs)
 
     def _run(self, scope: TaskScope) -> Dict[str, Any]:
         for node in self._nodes.values():
@@ -639,6 +658,88 @@ class TaskGraph:
                     del remaining[node.name]
         finally:
             for node in remaining.values():
+                if not node.handle.done():
+                    node.handle._finish(None, TaskCancelledError(
+                        f"task {node.name!r} never ran (an upstream "
+                        f"dependency failed)"))
+        return {name: node.handle.result() for name, node in self._nodes.items()}
+
+    def _run_streaming(self, scope: TaskScope) -> Dict[str, Any]:
+        """Dataflow execution: submit each task the moment its own deps
+        complete (no wavefront barrier). The calling thread still
+        participates — of each newly-ready set it runs one task inline
+        (producer-participates, paper §VI) — and between submissions it
+        sweeps in-flight handles with the scheduler-free ``_done`` flag,
+        pausing on the shared spin cadence. Failure joins exactly the
+        graph's own in-flight handles (never a scope barrier), so
+        borrowed-scope sibling errors are not misattributed; never-run
+        tasks cancel with :class:`TaskCancelledError` like the wavefront
+        path."""
+        for node in self._nodes.values():
+            node.handle._reset()
+        waiting = dict(self._nodes)
+        inflight: List[_Node] = []
+        done: set = set()
+        woke = False
+        try:
+            while waiting or inflight:
+                progress = False
+                still: List[_Node] = []
+                finished: List[_Node] = []
+                for node in inflight:
+                    (finished if node.handle._done else still).append(node)
+                if finished:
+                    progress = True
+                    inflight = still
+                    if any(n.handle._error is not None for n in finished):
+                        # Join the graph's whole in-flight set and raise
+                        # only its errors (pulled from the scope aggregate
+                        # like the wavefront path's per-wave join).
+                        scope._wait_handles(
+                            [n.handle for n in finished]
+                            + [n.handle for n in still])
+                    for node in finished:
+                        done.add(node.name)
+                ready = [node for node in waiting.values()
+                         if all(d in done for d in node.deps)]
+                if ready:
+                    progress = True
+                    for node in ready:
+                        del waiting[node.name]
+                    for node in ready[:-1]:
+                        args = tuple(self._nodes[d].handle.result()
+                                     for d in node.deps)
+                        scope._submit_into(node.handle, node.fn, args, {})
+                        inflight.append(node)
+                    # Producer-participates: the caller runs one ready task
+                    # itself instead of going straight to a poll loop.
+                    last = ready[-1]
+                    args = tuple(self._nodes[d].handle.result()
+                                 for d in last.deps)
+                    scope._run_into(last.handle, last.fn, args, {})
+                    if last.handle._error is not None:
+                        scope._wait_handles(
+                            [last.handle] + [n.handle for n in inflight])
+                    done.add(last.name)
+                if progress:
+                    woke = False
+                    continue
+                # Nothing newly done, nothing ready: in-flight tasks hold
+                # the frontier (acyclic => inflight is non-empty here).
+                # Un-park a sleeping worker once (advisory hints must never
+                # deadlock a join), then *block* on the oldest in-flight
+                # handle rather than spin-polling: handles finish FIFO
+                # within a lane, and Event.wait hands the GIL to the
+                # workers — on few-core hosts a polling driver starves the
+                # very tasks it is waiting for. The short timeout re-sweeps
+                # the whole frontier so an out-of-order completion on
+                # another lane is picked up promptly too.
+                if not woke:
+                    scope.wake_up_hint()
+                    woke = True
+                inflight[0].handle._wait(0.0005)
+        finally:
+            for node in waiting.values():
                 if not node.handle.done():
                     node.handle._finish(None, TaskCancelledError(
                         f"task {node.name!r} never ran (an upstream "

@@ -14,6 +14,14 @@ through the :mod:`repro.tasks.api` façade:
     al., 2020): one ``parallel_for`` over the instances, chunked by
     ``grain`` instances per task.
 
+Since PR 9 there is additionally ``streamed(substrate)`` — pipelined
+execution over :mod:`repro.stream`, where the workload's stream items
+flow through its ``_stream_stages()`` decomposition (instance tasks by
+default; stencil time-steps / jsondoc byte chunks for the workloads that
+override it). It is deliberately *not* part of ``VARIANTS``: the three
+variants share one task list, while ``streamed`` reshapes the work, so
+benchmarks compare it explicitly rather than implicitly.
+
 Instance task closures **block until the result is ready** (each thunk
 ends in ``jax.block_until_ready``), so every variant times compute, not
 async dispatch — the fix for the PR 1–3 ``benchmarks/paper_kernels._pair``
@@ -242,6 +250,48 @@ class Workload:
             task.__name__ = f"{self.name}-fused"
             self._fused = task
         return self._fused
+
+    # -- streaming surface (PR 9) ------------------------------------------
+    def _stream_stages(self, stages: Optional[int] = None):
+        """``(items, stage_fns)`` for :meth:`streamed`. Base default: the
+        instance indices flow through one stage running the instance's
+        blocking task (so ``skew`` repeats are honored). Subclasses with a
+        natural pipeline decomposition (stencil time-steps, jsondoc byte
+        chunks) override this — those decompositions replace the per-task
+        skew knob with real per-stage structure, so they ignore ``skew``
+        like the fused variant does."""
+        if stages not in (None, 1):
+            raise ValueError(
+                f"workload {self.name!r} has a single-stage stream; "
+                f"got stages={stages}")
+        tasks = self.tasks
+
+        def run_instance(i: int) -> Any:
+            return tasks[i]()
+
+        return list(range(self.n_instances)), [run_instance]
+
+    def _stream_collect(self, outputs: List[Any]) -> List[Any]:
+        """Fold the pipeline's output items into the per-instance result
+        list :meth:`check` expects (identity by default)."""
+        return outputs
+
+    def streamed(self, substrate: Any = "relic", *,
+                 stages: Optional[int] = None,
+                 capacity: Optional[int] = None) -> List[Any]:
+        """Pipelined execution over the streaming executor: the workload's
+        stream items flow through its stage functions composed as a
+        :class:`repro.stream.Pipeline` (each stage its own assistant for a
+        registry-name ``substrate``; fused onto a single ``Scheduler``
+        instance; fully inline under ``"serial"``). Returns the same
+        per-instance result list as every other variant — oracle-checked
+        with :meth:`check` like the rest."""
+        from repro.stream import Pipeline
+        items, fns = self._stream_stages(stages)
+        cap = capacity if capacity is not None else max(4, min(32, len(items)))
+        with Pipeline(list(fns), substrate=substrate, capacity=cap) as pipe:
+            outputs = pipe.run(items)
+        return self._stream_collect(outputs)
 
     # -- the three execution variants --------------------------------------
     def serial(self) -> List[Any]:

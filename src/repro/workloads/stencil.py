@@ -65,6 +65,29 @@ class StencilWorkload(Workload):
     def _kernel(self, grid: jax.Array) -> jax.Array:
         return stencil_sweep(grid)
 
+    def _stream_stages(self, stages=None):
+        """Stencil time-steps as a pipeline: the 8 Jacobi sweeps split into
+        ``stages`` sweep-groups (default 4, so 2 sweeps per stage), each a
+        stage; the per-instance *grids* flow through. While instance 0 is
+        in sweep-group 2, instance 1 is in sweep-group 1 — the dependency
+        chain a barriered wavefront cannot overlap. Sweep order is
+        preserved per grid (linear pipelines are FIFO), so the final grids
+        equal the serial 8-sweep result and the standard oracle applies.
+        ``sweeps`` is a static jit arg, so each group size compiles once.
+        Ignores ``skew`` (the decomposition replaces the repeat knob)."""
+        s = 4 if stages is None else stages
+        if s < 1 or SWEEPS % s:
+            raise ValueError(
+                f"stages must divide SWEEPS={SWEEPS}, got {stages}")
+        per = SWEEPS // s
+
+        def sweep_group(grid: jax.Array) -> jax.Array:
+            return jax.block_until_ready(stencil_sweep(grid, sweeps=per))
+
+        items = [jnp.array(self._input()) for _ in range(self.n_instances)]
+        jax.block_until_ready(stencil_sweep(items[0], sweeps=per))  # warm
+        return items, [sweep_group] * s
+
     def check_one(self, result: Any) -> None:
         np.testing.assert_allclose(np.asarray(result), _np_stencil(_base_grid()),
                                    rtol=1e-5, atol=1e-6)

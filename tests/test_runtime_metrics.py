@@ -1,0 +1,87 @@
+"""Shared metrics primitives (repro.runtime.metrics) and the serve-layer
+re-export contract.
+
+The nearest-rank percentile helpers and ``LatencySeries`` moved from
+``repro.serve.metrics`` into the runtime layer so the streaming executor
+and benchmarks can use them without importing the serving stack. The
+serve module re-exports them; these identity pins turn an accidental
+re-implementation (two diverging copies) into a test failure.
+"""
+
+import numpy as np
+import pytest
+
+import repro.runtime.metrics as runtime_metrics
+import repro.serve.metrics as serve_metrics
+from repro.runtime.metrics import Gauge, LatencySeries, nearest_rank, percentiles
+
+
+# ------------------------------------------------------------- identity pins
+
+def test_serve_reexports_are_the_same_objects():
+    assert serve_metrics.nearest_rank is runtime_metrics.nearest_rank
+    assert serve_metrics.percentiles is runtime_metrics.percentiles
+    assert serve_metrics.LatencySeries is runtime_metrics.LatencySeries
+    assert serve_metrics.Gauge is runtime_metrics.Gauge
+
+
+# ------------------------------------------------------------- nearest rank
+
+def test_nearest_rank_matches_definition():
+    vals = sorted([5.0, 1.0, 3.0, 2.0, 4.0])
+    # rank = ceil(q/100 * n), 1-indexed, clamped to [1, n]
+    assert nearest_rank(vals, 50) == 3.0
+    assert nearest_rank(vals, 95) == 5.0
+    assert nearest_rank(vals, 100) == 5.0
+    assert nearest_rank(vals, 1) == 1.0
+    assert nearest_rank([7.0], 99) == 7.0
+
+
+def test_percentiles_dict():
+    vals = [float(i) for i in range(1, 101)]
+    p = percentiles(vals)
+    assert p == {50: 50.0, 95: 95.0, 99: 99.0}
+    with pytest.raises(ValueError, match="empty sample"):
+        percentiles([])
+
+
+def test_nearest_rank_agrees_with_numpy_on_large_samples():
+    rng = np.random.default_rng(0)
+    vals = sorted(rng.exponential(10.0, size=5000).tolist())
+    for q in (50, 90, 99):
+        ours = nearest_rank(vals, q)
+        ref = float(np.percentile(vals, q, method="inverted_cdf"))
+        assert abs(ours - ref) <= 1e-9
+
+
+# ------------------------------------------------------------ LatencySeries
+
+def test_latency_series_snapshot_and_percentiles():
+    s = LatencySeries()
+    for v in (3.0, 1.0, 2.0):
+        s.add(v)
+    assert len(s) == 3
+    assert s.snapshot() == [3.0, 1.0, 2.0]   # insertion order preserved
+    assert s.percentiles()[50] == 2.0
+
+
+def test_latency_series_empty():
+    s = LatencySeries()
+    assert len(s) == 0
+    assert s.snapshot() == []
+
+
+# -------------------------------------------------------------------- Gauge
+
+def test_gauge_observe_and_mean():
+    g = Gauge()
+    for v in (2.0, 4.0, 6.0):
+        g.observe(v)
+    assert g.samples == 3
+    assert g.last == 6.0
+    assert g.min == 2.0 and g.max == 6.0
+    assert g.mean == 4.0
+    d = g.asdict()
+    assert d == {"last": 6.0, "min": 2.0, "max": 6.0, "mean": 4.0}
+    assert Gauge().asdict() == {"last": 0.0, "min": 0.0, "max": 0.0,
+                                "mean": 0.0}
