@@ -976,6 +976,17 @@ def run_faults(iters: int, em: Emitter):
       (submitted - completed at death) and the pool ledger to balance —
       a violated invariant crashes the benchmark rather than emitting a
       row.
+    * ``faults/stage_kill/workersN`` — the PR 10 stream stratum: a
+      StageKillSwitch takes a farm worker down mid-stream with items in
+      flight; ``Farm(respawn=True)`` quarantines, respawns, and re-emits
+      exactly the lost tags. Measured: detection latency (loop death ->
+      collector recovery entry), recovery time (recovery entry -> fresh
+      worker live + lost tags handed back), throughput dip vs a clean
+      run. Asserted: output exactly-once and in order, re-emitted tags ==
+      measured lost tags, dedup ledger untouched.
+    * ``faults/ckpt_checksum`` — per-entry CRC32 on vs off: synchronous
+      save of a fixed ~2 MB state, per-save wall time. The on/off ratio
+      is the integrity tax on the serialize path.
     """
     from repro.core.relic_pool import RelicPool
     from repro.runtime.chaos import KillSwitch
@@ -1063,6 +1074,82 @@ def run_faults(iters: int, em: Emitter):
         em.row(f"faults/kill/lanes{lanes}/run", faulted_s / n * 1e6,
                f"clean={clean_s / n * 1e6:.2f}us;dip=x{dip:.2f};"
                f"lost={failure.lost};ledger=ok")
+
+    # -- stream stratum: kill a farm worker mid-stream (PR 10) ------------
+    from repro.runtime.chaos import StageKillSwitch
+    from repro.stream import Farm, Pipeline
+
+    def ident(x):
+        return x
+
+    def farm_run(workers, kill):
+        farm = Farm(ident, workers=workers, respawn=True, capacity=16)
+        ks = (StageKillSwitch(after_items=5).arm(farm._workers[1])
+              if kill else None)
+        t0 = time.perf_counter()
+        with Pipeline([farm]) as pipe:
+            out = pipe.run(range(n))
+        total_s = time.perf_counter() - t0
+        # exactly-once, in order — with or without the kill
+        assert out == list(range(n)), "farm dropped/duplicated items"
+        detect_s = recover_s = 0.0
+        failure = None
+        if kill:
+            fails = farm.take_worker_failures()
+            assert ks.fired, "stage kill switch never fired"
+            assert len(fails) == 1, f"expected 1 worker death, {len(fails)}"
+            failure = fails[0]
+            assert failure.respawned and failure.reemitted
+            # THE acceptance invariant at this stratum: replayed tags ==
+            # the dealt-minus-released loss, exactly once.
+            assert sorted(farm.reemitted_tags) == list(failure.lost_tags)
+            assert farm.dup_dropped == 0
+            detect_s = failure.detected_s - ks.fired_t
+            recover_s = failure.recovered_s - failure.detected_s
+        return total_s, detect_s, recover_s, failure
+
+    for workers in (2, 4):
+        clean_s, _, _, _ = farm_run(workers, kill=False)
+        faulted_s, detect_s, recover_s, failure = farm_run(workers, kill=True)
+        dip = faulted_s / max(clean_s, 1e-9)
+        em.row(f"faults/stage_kill/workers{workers}/detect", detect_s * 1e6,
+               f"lost={len(failure.lost_tags)};"
+               f"killed_after={failure.lost_tags[0] if failure.lost_tags else 'none'}")
+        em.row(f"faults/stage_kill/workers{workers}/recover",
+               recover_s * 1e6, "respawned=ok;reemitted==lost")
+        em.row(f"faults/stage_kill/workers{workers}/run",
+               faulted_s / n * 1e6,
+               f"clean={clean_s / n * 1e6:.2f}us;dip=x{dip:.2f};"
+               f"lost={len(failure.lost_tags)};dups=0;ledger=ok")
+
+    # -- persistence stratum: checksum save overhead ----------------------
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(42)
+    state = {f"layer{i}/w": rng.standard_normal((256, 256)).astype(np.float32)
+             for i in range(8)}                       # ~2 MB of entries
+    ck_reps = 5
+    ck_us = {}
+    for checksum in (True, False):
+        with tempfile.TemporaryDirectory() as td:
+            mgr = CheckpointManager(td, keep=2, async_=False,
+                                    checksum=checksum)
+            mgr.save(state, 0)                        # warm the dir
+            t0 = time.perf_counter()
+            for r in range(ck_reps):
+                mgr.save(state, r + 1)
+            dt = time.perf_counter() - t0
+        tag = "on" if checksum else "off"
+        ck_us[tag] = dt / ck_reps * 1e6
+        em.row(f"faults/ckpt_checksum/{tag}", ck_us[tag],
+               f"entries=8;mb=2;reps={ck_reps}")
+    em.comment(f"ckpt checksum overhead: x"
+               f"{ck_us['on'] / max(ck_us['off'], 1e-9):.3f} "
+               "(on/off; CRC32 over stored bytes)")
 
 
 def run_roofline(iters: int, em: Emitter):

@@ -1,2 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import (CheckpointCorruptError,  # noqa: F401
+                                      CheckpointManager)
 from repro.checkpoint.reshard import elastic_restore, reshard_state  # noqa: F401

@@ -13,10 +13,21 @@ Design (1000+ node posture, see docs/schedulers.md for the substrate layer):
     continues while bytes hit disk (`wake_up_hint` before the save
     window, `sleep_hint` after). This is a production use of the paper's
     API, not a demo.
-  * retention: keep the newest ``keep`` checkpoints.
-  * restore: latest valid manifest wins; arrays are `device_put` with the
-    *current* mesh's shardings, so restoring onto a different topology
-    (elastic restart after losing a pod) is the same code path — see
+  * retention: keep the newest ``keep`` checkpoints — but never collect
+    the last manifest-valid one, even when ``keep`` would (a retention
+    sweep must not delete the only thing ``--resume`` can use).
+  * crash-consistent restore: the manifest carries ``format_version`` and
+    (by default, ``RELIC_CKPT_CHECKSUM``) a CRC32 per entry over the
+    stored bytes. ``latest_step()`` only counts steps whose manifest
+    *parses and validates* (a torn ``manifest.json`` is skipped with a
+    warning, not raised); ``restore()`` verifies entry checksums and falls
+    back to the next-latest valid step, quarantining a corrupt dir as
+    ``<dir>.corrupt`` (kept for post-mortem, never deleted) rather than
+    restoring torn state. Crash points are deterministically testable via
+    ``repro.runtime.chaos.FsFaultInjector``.
+  * restore placement: arrays are `device_put` with the *current* mesh's
+    shardings, so restoring onto a different topology (elastic restart
+    after losing a pod) is the same code path — see
     `repro.checkpoint.reshard`.
   * multi-host: each host writes `shard-<h>` subdirs of its addressable
     shards (single-process here, noted in the manifest).
@@ -28,6 +39,8 @@ import json
 import os
 import shutil
 import time
+import warnings
+import zlib
 from pathlib import Path
 from typing import Any, List, Optional, Tuple
 
@@ -35,10 +48,22 @@ import jax
 import numpy as np
 
 from repro.core.schedulers import Scheduler
+from repro.runtime.config import resolve_checkpoint_config
 from repro.stream import Pipeline, Stage, StreamFailure
 from repro.tasks.api import TaskGroupError
 
 MANIFEST = "manifest.json"
+#: Manifest schema version. 1 = pre-checksum (implicit — no
+#: ``format_version`` key); 2 = per-entry ``crc32``/``nbytes`` +
+#: ``format_version``. Restore accepts both; an *unknown* (future) version
+#: is treated like a torn manifest: skip-and-warn, fall back.
+FORMAT_VERSION = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A specific requested checkpoint failed validation (torn manifest,
+    missing entry file, CRC mismatch). Only raised for an *explicit*
+    ``restore(step=...)`` — latest-wins restore falls back instead."""
 
 
 def _flat(tree) -> dict[str, Any]:
@@ -78,14 +103,20 @@ class CheckpointManager:
     """
 
     def __init__(self, directory: str | Path, keep: int = 3,
-                 async_: bool = True, scheduler: "str | Scheduler" = "relic"):
+                 async_: bool = True, scheduler: "str | Scheduler" = "relic",
+                 checksum: Optional[bool] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_ = async_
+        self.checksum = resolve_checkpoint_config(checksum=checksum).checksum
         self._seq = 0          # distinguishes overlapped tmp dirs
         self._pending = 0      # saves fed but not yet collected by wait()
         self._pipe: Optional[Pipeline] = None
+        # Opt-in chaos hook (None in production): consulted at the named
+        # filesystem crash points of _serialize/_publish. See
+        # repro.runtime.chaos.FsFaultInjector.
+        self._chaos_fs: Optional[Any] = None
         if async_:
             if isinstance(scheduler, str):
                 nodes = [
@@ -138,6 +169,9 @@ class CheckpointManager:
     def _serialize(self, item: tuple) -> tuple:
         """Stage 1: write the tmp dir (the byte-heavy half of a save)."""
         seq, host, step = item
+        fs = self._chaos_fs
+        if fs is not None:
+            fs.at("serialize-start", step)
         tmp = self.dir / f"step_{step:08d}.tmp-{seq}"
         if tmp.exists():
             shutil.rmtree(tmp)
@@ -149,11 +183,26 @@ class CheckpointManager:
             if arr.dtype.kind not in "biufc":  # ml_dtypes (bfloat16, fp8...)
                 arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
             np.save(tmp / fname, arr)
-            entries[key] = {"file": fname, "shape": list(arr.shape),
-                            "dtype": logical}
-        manifest = {"step": step, "time": time.time(), "entries": entries,
-                    "hosts": 1}
-        (tmp / MANIFEST).write_text(json.dumps(manifest))
+            ent = {"file": fname, "shape": list(arr.shape),
+                   "dtype": logical}
+            if self.checksum:
+                # CRC over the stored payload bytes (post uint view): the
+                # same bytes restore hashes after np.load, so a torn or
+                # bit-flipped entry file cannot verify.
+                stored = np.ascontiguousarray(arr)
+                ent["crc32"] = zlib.crc32(stored.tobytes())
+                ent["nbytes"] = int(stored.nbytes)
+            entries[key] = ent
+            if fs is not None:
+                fs.entry_written(tmp / fname, step)
+        manifest = {"format_version": FORMAT_VERSION, "step": step,
+                    "time": time.time(), "entries": entries, "hosts": 1,
+                    "checksum": self.checksum}
+        text = json.dumps(manifest)
+        if fs is not None:
+            fs.write_manifest(tmp / MANIFEST, text, step)
+        else:
+            (tmp / MANIFEST).write_text(text)
         return (step, tmp)
 
     def _publish(self, item: tuple) -> int:
@@ -162,6 +211,9 @@ class CheckpointManager:
         sole toucher of final names — the one-writer invariant the old
         ``_write_lock`` bought, now held structurally."""
         step, tmp = item
+        fs = self._chaos_fs
+        if fs is not None:
+            fs.at("pre-publish", step)
         final = self.dir / f"step_{step:08d}"
         if final.exists():  # idempotent re-save of the same step
             shutil.rmtree(final)
@@ -171,36 +223,111 @@ class CheckpointManager:
 
     def _gc(self) -> None:
         done = sorted(p for p in self.dir.glob("step_*")
-                      if ".tmp" not in p.name)
-        for p in done[: -self.keep] if self.keep else []:
+                      if ".tmp" not in p.name
+                      and not p.name.endswith(".corrupt"))
+        if not self.keep:
+            return
+        drop = done[: -self.keep]
+        if drop and not any(
+                self._load_manifest(p, warn=False) is not None
+                for p in done[-self.keep:]):
+            # Retention would delete every manifest-valid checkpoint (the
+            # keep window holds only torn ones): spare the newest valid
+            # dir below the window — --resume must always have something.
+            spare = next((p for p in reversed(drop)
+                          if self._load_manifest(p, warn=False) is not None),
+                         None)
+            if spare is not None:
+                drop = [p for p in drop if p is not spare]
+        for p in drop:
             shutil.rmtree(p, ignore_errors=True)
 
     # --------------------------------------------------------------- restore
 
-    def latest_step(self) -> Optional[int]:
+    def _load_manifest(self, d: Path, warn: bool = True) -> Optional[dict]:
+        """Parse and validate ``d``'s manifest; None (optionally with a
+        warning) when it is missing, torn, structurally wrong, or written
+        by an unknown future format — the skip-and-warn primitive
+        ``latest_step``/``restore`` build their fallback on."""
+        why = None
+        manifest: Optional[dict] = None
+        try:
+            manifest = json.loads((d / MANIFEST).read_text())
+        except FileNotFoundError:
+            return None                 # mid-write dir: not even a warning
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            why = f"unreadable manifest ({e})"
+        if why is None:
+            if not isinstance(manifest, dict):
+                why = "manifest is not an object"
+            elif not isinstance(manifest.get("entries"), dict) \
+                    or not isinstance(manifest.get("step"), int):
+                why = "manifest missing step/entries"
+            elif manifest.get("format_version", 1) > FORMAT_VERSION:
+                why = (f"unknown format_version "
+                       f"{manifest.get('format_version')}")
+        if why is not None:
+            if warn:
+                warnings.warn(
+                    f"checkpoint {d.name}: {why}; skipping it",
+                    RuntimeWarning, stacklevel=3)
+            return None
+        return manifest
+
+    def valid_steps(self) -> List[int]:
+        """Steps with a parseable, schema-valid manifest, ascending.
+        (Manifest-valid, not checksum-verified — entry payloads are only
+        hashed when actually restored.)"""
         steps = []
         for p in sorted(self.dir.glob("step_*")):
-            if ".tmp" in p.name or not (p / MANIFEST).exists():
+            if ".tmp" in p.name or p.name.endswith(".corrupt"):
+                continue
+            if self._load_manifest(p) is None:
                 continue
             steps.append(int(p.name.split("_")[1]))
-        return max(steps) if steps else None
+        return steps
 
-    def restore(self, template, step: Optional[int] = None,
-                shardings=None) -> Tuple[Any, int]:
-        """Restore into `template`'s structure; `shardings` (optional pytree)
-        places each array on the current mesh — the elastic-restart path."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {self.dir}")
-        d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / MANIFEST).read_text())
+    def latest_step(self) -> Optional[int]:
+        steps = self.valid_steps()
+        return steps[-1] if steps else None
+
+    def _quarantine(self, d: Path) -> None:
+        """Move a corrupt checkpoint dir aside as ``<name>.corrupt`` (kept
+        for post-mortem — never deleted, never globbed as a step again)."""
+        target = d.with_name(d.name + ".corrupt")
+        n = 1
+        while target.exists():
+            target = d.with_name(f"{d.name}.corrupt-{n}")
+            n += 1
+        os.replace(d, target)
+        warnings.warn(
+            f"checkpoint {d.name}: corrupt; quarantined as {target.name}",
+            RuntimeWarning, stacklevel=3)
+
+    def _restore_step(self, d: Path, manifest: dict, template,
+                      shardings) -> Any:
+        """Load one validated manifest's entries, verifying checksums when
+        the manifest carries them; raises :class:`CheckpointCorruptError`
+        on any torn/mismatched entry."""
         flat_t = _flat(template)
         flat_s = _flat(shardings) if shardings is not None else {}
         out = {}
         for key, ent in manifest["entries"].items():
             if key not in flat_t:
                 continue  # forward-compat: ignore unknown entries
-            arr = np.load(d / ent["file"])
+            try:
+                arr = np.load(d / ent["file"])
+            except (OSError, ValueError, EOFError) as e:
+                raise CheckpointCorruptError(
+                    f"{d.name}/{ent['file']}: unreadable ({e})") from e
+            if "crc32" in ent:
+                stored = np.ascontiguousarray(arr)
+                crc = zlib.crc32(stored.tobytes())
+                if crc != ent["crc32"] or stored.nbytes != ent["nbytes"]:
+                    raise CheckpointCorruptError(
+                        f"{d.name}/{ent['file']}: checksum mismatch "
+                        f"(crc {crc:#010x} != manifest "
+                        f"{ent['crc32']:#010x})")
             logical = np.dtype(jax.numpy.dtype(ent["dtype"]))
             if arr.dtype != logical:
                 arr = arr.view(logical)  # bf16 etc. stored as raw uint views
@@ -211,7 +338,46 @@ class CheckpointManager:
         missing = set(flat_t) - set(out)
         if missing:
             raise KeyError(f"checkpoint missing {sorted(missing)[:5]}...")
-        return _unflat_into(template, out), step
+        return _unflat_into(template, out)
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int]:
+        """Restore into `template`'s structure; `shardings` (optional pytree)
+        places each array on the current mesh — the elastic-restart path.
+
+        With ``step=None`` (latest wins) a checkpoint that fails validation
+        — torn manifest, missing or checksum-mismatched entry — is
+        quarantined as ``.corrupt`` and the next-latest valid step is
+        tried, so a crash mid-save can never brick the resume path. An
+        *explicit* ``step=`` that fails validation raises
+        :class:`CheckpointCorruptError` instead (the caller asked for that
+        exact state; silently substituting another would be worse)."""
+        if step is not None:
+            d = self.dir / f"step_{step:08d}"
+            manifest = self._load_manifest(d)
+            if manifest is None:
+                if not d.exists():
+                    raise FileNotFoundError(f"no checkpoint {d}")
+                raise CheckpointCorruptError(
+                    f"{d.name}: invalid manifest")
+            return self._restore_step(d, manifest, template, shardings), step
+        tried = False
+        for s in reversed(self.valid_steps()):
+            tried = True
+            d = self.dir / f"step_{s:08d}"
+            manifest = self._load_manifest(d)
+            if manifest is None:
+                continue
+            try:
+                return (self._restore_step(d, manifest, template, shardings),
+                        s)
+            except CheckpointCorruptError:
+                self._quarantine(d)
+        if tried:
+            raise FileNotFoundError(
+                f"no restorable checkpoint under {self.dir} "
+                "(every candidate was corrupt and has been quarantined)")
+        raise FileNotFoundError(f"no checkpoint under {self.dir}")
 
     def close(self) -> None:
         if self._pipe is not None:

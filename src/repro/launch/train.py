@@ -38,6 +38,13 @@ def main(argv=None):
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-checksum", default="on", choices=["on", "off"],
+                    help="per-entry CRC32 in the checkpoint manifest "
+                         "(verified on restore)")
+    ap.add_argument("--ckpt-chaos", default="",
+                    help="chaos: crash the Nth save at a named fs point, "
+                         "as point[:at_save] (e.g. 'manifest:1'); points: "
+                         "serialize-start, entry, manifest, pre-publish")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -59,7 +66,20 @@ def main(argv=None):
         state = jax.tree.map(jax.device_put, state, state_sh)
         step_fn = jax.jit(make_train_step(model, oc), donate_argnums=(0,))
 
-        mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+        mgr = None
+        if args.ckpt:
+            mgr = CheckpointManager(
+                args.ckpt,
+                # Chaos runs save synchronously so the injected FsCrash
+                # unwinds the driver at the exact write point — the
+                # closest single-process stand-in for dying mid-save.
+                async_=not args.ckpt_chaos,
+                checksum=args.ckpt_checksum == "on")
+            if args.ckpt_chaos:
+                from repro.runtime.chaos import FsFaultInjector
+                point, _, at_save = args.ckpt_chaos.partition(":")
+                FsFaultInjector(crash_point=point,
+                                at_save=int(at_save or 0)).arm(mgr)
         start = 0
         if mgr and args.resume and mgr.latest_step() is not None:
             state, start = mgr.restore(state, shardings=state_sh)
@@ -67,24 +87,30 @@ def main(argv=None):
 
         mon = StragglerMonitor(n_hosts=1)
         t_last = time.time()
-        for i in range(start, args.steps):
-            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
-            state, metrics = step_fn(state, batch)
-            if (i + 1) % args.log_every == 0 or i == start:
-                loss = float(metrics["loss"])
-                dt_step = (time.time() - t_last) / args.log_every
-                mon.record(0, dt_step)
-                t_last = time.time()
-                print(f"step {i+1:5d}  loss {loss:.4f}  "
-                      f"lr {float(metrics['lr']):.2e}  "
-                      f"gnorm {float(metrics['grad_norm']):.3f}  "
-                      f"{dt_step*1e3:.0f} ms/step", flush=True)
-            if mgr and (i + 1) % args.ckpt_every == 0:
-                mgr.save(state, i + 1)  # async on the Relic assistant
-        if mgr:
-            mgr.save(state, args.steps, block=True)
-            mgr.close()
-        pipe.stop()
+        try:
+            for i in range(start, args.steps):
+                batch = {k: jnp.asarray(v)
+                         for k, v in pipe.next_batch().items()}
+                state, metrics = step_fn(state, batch)
+                if (i + 1) % args.log_every == 0 or i == start:
+                    loss = float(metrics["loss"])
+                    dt_step = (time.time() - t_last) / args.log_every
+                    mon.record(0, dt_step)
+                    t_last = time.time()
+                    print(f"step {i+1:5d}  loss {loss:.4f}  "
+                          f"lr {float(metrics['lr']):.2e}  "
+                          f"gnorm {float(metrics['grad_norm']):.3f}  "
+                          f"{dt_step*1e3:.0f} ms/step", flush=True)
+                if mgr and (i + 1) % args.ckpt_every == 0:
+                    mgr.save(state, i + 1)  # async on the Relic assistant
+            if mgr:
+                mgr.save(state, args.steps, block=True)
+                mgr.close()
+        finally:
+            # A chaos FsCrash (or any error) must not leak the prefetch
+            # threads into the caller's process — the resume test runs
+            # main() twice in-process.
+            pipe.stop()
         return float(metrics["loss"])
 
 

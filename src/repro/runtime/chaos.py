@@ -26,6 +26,19 @@ injection a first-class, *reproducible* input to the existing machinery:
   the assistant thread exits mid-loop after a chosen number of drained
   bursts, losing the popped burst — the deterministic "lane died with
   in-flight work" scenario the supervision layer must account for exactly.
+* :class:`StageKillSwitch` — the same idea one stratum up, for *stream
+  loop tasks*: a ``repro.stream.Stage`` consults its own ``_chaos_kill``
+  hook once per popped item, and a fired switch kills the stage loop with
+  that item popped but unprocessed — the deterministic "dead farm worker
+  with in-flight tags" scenario the stream recovery layer (quarantine +
+  re-emit, ``stream/farm.py``) must account for exactly.
+* :class:`FsFaultInjector` — deterministic filesystem faults for the
+  persistence layer: crash a ``CheckpointManager`` save at a *named*
+  point (before serialization, between entry files, mid-``manifest.json``
+  write — leaving a torn manifest — or between serialize and publish) by
+  raising :class:`FsCrash`, a ``BaseException`` so it models a process
+  death, not a handleable task error. Every crash-consistency path in
+  ``checkpoint/manager.py`` is testable without timing games.
 
 No module-level import of ``repro.core.schedulers`` (it imports the relic
 family, which must stay importable without this module): the registry is
@@ -47,6 +60,9 @@ __all__ = [
     "ChaosSpec",
     "FaultPlan",
     "KillSwitch",
+    "StageKillSwitch",
+    "FsCrash",
+    "FsFaultInjector",
     "ChaosScheduler",
     "plan_bursts",
 ]
@@ -240,6 +256,155 @@ class KillSwitch:
         production, checked once per drained burst off the hot path."""
         relic._chaos_kill = self
         return self
+
+
+class StageKillSwitch:
+    """Arms a stream stage's opt-in loop-kill hook (``Stage._chaos_kill``).
+
+    The :class:`KillSwitch` analogue for stream loop tasks: the stage's
+    ``_run_loop`` consults the hook once per popped data item, *before*
+    applying ``fn`` and before counting the item — so firing kills the
+    loop (via ``SystemExit``, the "assistant died" escape class) with the
+    popped item unprocessed, and the lost in-flight set is exactly what
+    the dealt-minus-released accounting in ``stream/farm.py`` reports.
+    ``after_items`` items are allowed through first. Records what it did
+    (``fired``, ``fired_t``, ``killed_after``) for detection-latency
+    measurements and test assertions.
+    """
+
+    def __init__(self, after_items: int = 0):
+        if after_items < 0:
+            raise ValueError(
+                f"after_items must be >= 0, got {after_items}")
+        self.after_items = after_items
+        self.fired = False
+        self.fired_t = 0.0
+        self.killed_after = 0
+
+    def __call__(self, items_seen: int) -> bool:
+        if self.fired:
+            return True
+        if items_seen >= self.after_items:
+            self.fired = True
+            self.fired_t = time.perf_counter()
+            self.killed_after = items_seen
+            return True
+        return False
+
+    def arm(self, stage: Any) -> "StageKillSwitch":
+        """Attach to a ``repro.stream.Stage`` (e.g. a farm worker). Same
+        surface discipline as ``KillSwitch.arm``: a plain attribute,
+        ``None`` in production, checked once per popped item."""
+        stage._chaos_kill = self
+        return self
+
+
+class FsCrash(BaseException):
+    """A simulated process death during a filesystem write.
+
+    Deliberately **not** an ``Exception``: a real crash does not unwind
+    into a task-level error handler, so the injector's escape must take
+    the same route a killed thread takes — through a stream stage it kills
+    the loop task ("save worker died mid-write"), through a synchronous
+    save it propagates to the caller, and in both cases it leaves whatever
+    partial on-disk state the chosen crash point implies.
+    """
+
+
+class FsFaultInjector:
+    """Deterministic filesystem fault injection for ``CheckpointManager``.
+
+    Armed via ``arm(mgr)`` (sets the manager's ``None``-checked
+    ``_chaos_fs`` hook), the injector counts saves as they serialize and
+    crashes the ``at_save``-th one (0-based) at a named point:
+
+    * ``"serialize-start"`` — before anything is written (tmp dir empty);
+    * ``"entry"`` — after ``at_index`` entry files are fully written, with
+      the last one optionally truncated to ``torn_bytes`` (a mid-file
+      kill) — tmp dir partially populated, no manifest;
+    * ``"manifest"`` — mid-``manifest.json`` write: the first
+      ``torn_bytes`` bytes land (default: half), then the crash — the
+      torn-manifest case ``latest_step`` must skip-and-warn on;
+    * ``"pre-publish"`` — serialization complete, crash before the atomic
+      rename: a fully-formed ``.tmp`` dir that never becomes a step.
+
+    Records ``fired`` / ``fired_at`` ``(point, save_index, step)`` so
+    tests assert against what actually happened, not the plan.
+    """
+
+    POINTS = ("serialize-start", "entry", "manifest", "pre-publish")
+
+    def __init__(self, crash_point: Optional[str] = None, at_save: int = 0,
+                 at_index: int = 0, torn_bytes: Optional[int] = None):
+        if crash_point is not None and crash_point not in self.POINTS:
+            raise ValueError(
+                f"crash_point must be one of {self.POINTS}, "
+                f"got {crash_point!r}")
+        if at_save < 0:
+            raise ValueError(f"at_save must be >= 0, got {at_save}")
+        if at_index < 0:
+            raise ValueError(f"at_index must be >= 0, got {at_index}")
+        if torn_bytes is not None and torn_bytes < 0:
+            raise ValueError(
+                f"torn_bytes must be None or >= 0, got {torn_bytes}")
+        self.crash_point = crash_point
+        self.at_save = at_save
+        self.at_index = at_index
+        self.torn_bytes = torn_bytes
+        self.fired = False
+        self.fired_at: Optional[Tuple[str, int, int]] = None
+        self._save = -1       # bumped at each serialize-start
+        self._entries = 0
+
+    def arm(self, mgr: Any) -> "FsFaultInjector":
+        """Attach to a ``CheckpointManager``. Same test-surface discipline
+        as the kill switches: a plain ``_chaos_fs`` attribute, ``None`` in
+        production, consulted at the named write points."""
+        mgr._chaos_fs = self
+        return self
+
+    def _fire(self, point: str, step: int) -> None:
+        self.fired = True
+        self.fired_at = (point, self._save, step)
+        raise FsCrash(
+            f"chaos: simulated crash at {point!r} (save #{self._save}, "
+            f"step {step})")
+
+    def _armed(self, point: str) -> bool:
+        return (not self.fired and self.crash_point == point
+                and self._save == self.at_save)
+
+    def at(self, point: str, step: int) -> None:
+        """Crash-point probe (called by the manager's write path)."""
+        if point == "serialize-start":
+            self._save += 1
+            self._entries = 0
+        if self._armed(point):
+            self._fire(point, step)
+
+    def entry_written(self, path: Any, step: int) -> None:
+        """Per-entry-file probe; fires after ``at_index`` complete files,
+        truncating the last one to ``torn_bytes`` first (mid-file kill)."""
+        if not self._armed("entry"):
+            self._entries += 1
+            return
+        if self._entries < self.at_index:
+            self._entries += 1
+            return
+        if self.torn_bytes is not None:
+            data = path.read_bytes()
+            path.write_bytes(data[: self.torn_bytes])
+        self._fire("entry", step)
+
+    def write_manifest(self, path: Any, text: str, step: int) -> None:
+        """Manifest write-through; a ``"manifest"`` crash writes the torn
+        prefix and dies, anything else writes the full text."""
+        if self._armed("manifest"):
+            keep = (len(text) // 2 if self.torn_bytes is None
+                    else self.torn_bytes)
+            path.write_text(text[:keep])
+            self._fire("manifest", step)
+        path.write_text(text)
 
 
 class ChaosScheduler:

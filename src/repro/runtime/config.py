@@ -40,9 +40,17 @@ Two families:
       ``HeartbeatTracker``/``StragglerMonitor``; a lane with outstanding
       work and no progress for one full period is flagged as stalled.
 
-``resolve_serve_config()`` / ``resolve_supervise_config()`` return frozen
-snapshots recorded in BENCH meta alongside the spin cadence, so a recorded
-run's knob state is reproducible.
+``RELIC_CKPT_CHECKSUM``
+    Crash-consistency knob for ``repro.checkpoint``: ``1`` (default) makes
+    ``CheckpointManager`` record a CRC32 per entry in the manifest and
+    verify it on restore (falling back to the next-latest valid step on a
+    mismatch); ``0`` skips both (the pre-PR-10 format, still restorable —
+    entries without a checksum are simply not verified).
+
+``resolve_serve_config()`` / ``resolve_supervise_config()`` /
+``resolve_checkpoint_config()`` return frozen snapshots recorded in BENCH
+meta alongside the spin cadence, so a recorded run's knob state is
+reproducible.
 """
 
 from __future__ import annotations
@@ -240,3 +248,39 @@ def resolve_supervise_config(
 
     return SuperviseConfig(supervise=bool(supervise),
                            heartbeat_ms=float(heartbeat_ms))
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    """Resolved ``RELIC_CKPT_CHECKSUM`` knob snapshot for one
+    ``CheckpointManager`` instance."""
+
+    checksum: bool = True
+
+    def asdict(self) -> dict:
+        return asdict(self)
+
+
+def resolve_checkpoint_config(
+    *,
+    checksum: Optional[bool] = None,
+) -> CheckpointConfig:
+    """Resolve the checkpoint crash-consistency knobs for a *new* manager.
+
+    Same discipline as the other resolvers: explicit keyword arguments win
+    over the environment, the environment wins over the defaults, invalid
+    values raise ``ValueError``, re-read per instance.
+    """
+    if checksum is None:
+        raw = os.environ.get("RELIC_CKPT_CHECKSUM")
+        if raw is None or raw == "":
+            checksum = True
+        elif raw.strip().lower() in _TRUTHY:
+            checksum = True
+        elif raw.strip().lower() in _FALSY:
+            checksum = False
+        else:
+            raise ValueError(
+                f"RELIC_CKPT_CHECKSUM must be one of {_TRUTHY + _FALSY}, "
+                f"got {raw!r}")
+    return CheckpointConfig(checksum=bool(checksum))

@@ -171,14 +171,22 @@ class LaneSupervisor:
 
     def __init__(self, n_lanes: int, heartbeat_s: float = 0.1,
                  clock=time.monotonic, window: int = 8, z: float = 4.0,
-                 patience: int = 3):
+                 patience: int = 3,
+                 names: Optional[Sequence[str]] = None):
         if n_lanes <= 0:
             raise ValueError(f"n_lanes must be positive, got {n_lanes}")
         if heartbeat_s <= 0:
             raise ValueError(
                 f"heartbeat_s must be positive, got {heartbeat_s}")
+        if names is not None and len(names) != n_lanes:
+            raise ValueError(
+                f"names has {len(names)} entries for {n_lanes} lanes")
         self.n_lanes = n_lanes
         self.heartbeat_s = heartbeat_s
+        #: Optional human-readable lane labels. A wiring layer that knows
+        #: what the lanes *are* (Pipeline: its stages) fills this in if the
+        #: caller didn't, so flag readouts can name the culprit.
+        self.names: Optional[List[str]] = list(names) if names else None
         self._clock = clock
         # Two periods of silence before a lane counts as stalled: the sweep
         # cadence equals the period, so a one-period timeout would flap on
@@ -236,3 +244,15 @@ class LaneSupervisor:
         """Lanes persistently slower than their peers (median/MAD z-score
         over per-period pace, ``patience`` consecutive strikes)."""
         return self.monitor.stragglers()
+
+    def _name(self, i: int) -> str:
+        return self.names[i] if self.names else f"lane{i}"
+
+    def stalled_names(self) -> List[str]:
+        """:meth:`stalled`, mapped through ``names`` (``lane<i>`` when
+        unnamed) — the readout a log line wants."""
+        return [self._name(i) for i in self.stalled()]
+
+    def straggler_names(self) -> List[str]:
+        """:meth:`stragglers`, mapped through ``names``."""
+        return [self._name(i) for i in self.stragglers()]

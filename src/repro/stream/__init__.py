@@ -18,16 +18,18 @@ Built on it (PR 9): ``TaskGraph.run(streaming=True)``,
 publish stages), and ``Workload.streamed()``. See docs/streaming.md.
 """
 
-from repro.stream.farm import Farm
+from repro.stream.farm import Farm, WorkerFailure
 from repro.stream.pipeline import Pipeline
-from repro.stream.stage import (STOP, Stage, StreamError, StreamFailure,
-                                StreamUsageError, worker_alive)
+from repro.stream.stage import (STOP, Stage, StageFailedError, StreamError,
+                                StreamFailure, StreamUsageError, worker_alive)
 
 __all__ = [
     "STOP",
     "Stage",
+    "StageFailedError",
     "Pipeline",
     "Farm",
+    "WorkerFailure",
     "StreamError",
     "StreamFailure",
     "StreamUsageError",

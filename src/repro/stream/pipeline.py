@@ -78,11 +78,16 @@ class Pipeline:
     or item-at-a-time with explicit ``put()`` / ``get()`` (strict
     one-in/one-out accounting; ``get`` raises :class:`StreamError` for an
     item whose stage failed, ``get_raw`` returns the marker instead).
+
+    ``supervisor=`` takes a :class:`repro.runtime.fault.LaneSupervisor`
+    sized to the stage count for advisory stalled/straggler *stage*
+    detection — see :meth:`check_stages`.
     """
 
     def __init__(self, stages: Sequence[Union[Stage, Callable[[Any], Any], Any]],
                  *, substrate: Union[str, Scheduler] = "relic",
-                 capacity: int = DEFAULT_CAPACITY, record: bool = False):
+                 capacity: int = DEFAULT_CAPACITY, record: bool = False,
+                 supervisor: Optional[Any] = None):
         if not stages:
             raise StreamUsageError("a Pipeline needs at least one stage")
         if isinstance(substrate, Scheduler):
@@ -122,6 +127,21 @@ class Pipeline:
         self._probe_every = (_PROBE_EVERY_SPINS
                              if resolve_supervise_config().supervise else 0)
         self._pause_every = resolve_spin_pause_every()
+        # Advisory progress supervision (PR 8's LaneSupervisor lifted to
+        # the stage stratum): one "lane" per stage, fed this pipeline's
+        # fed/drained counters on every driver-side bounded-wait probe
+        # (and on explicit check_stages() calls). Strictly advisory — the
+        # *liveness* story is the bounded waits; this flags the cases they
+        # cannot: a stage that is alive but wedged (stalled) or alive but
+        # persistently slow (straggler).
+        if supervisor is not None and supervisor.n_lanes != len(self._nodes):
+            raise StreamUsageError(
+                f"supervisor has {supervisor.n_lanes} lanes for "
+                f"{len(self._nodes)} stages — size it with "
+                "LaneSupervisor(n_lanes=len(stages), ...)")
+        self._supervisor = supervisor
+        if supervisor is not None and getattr(supervisor, "names", None) is None:
+            supervisor.names = [node.name for node in self._nodes]
 
     # -- introspection -----------------------------------------------------
     @property
@@ -144,6 +164,38 @@ class Pipeline:
 
     def stats(self) -> List[dict]:
         return [node.stats() for node in self._nodes]
+
+    # -- advisory supervision (needs a supervisor= at construction) --------
+    def check_stages(self) -> bool:
+        """One supervision sweep: feed each stage's drained counter and its
+        backlog (driver-fed minus stage-drained) to the supervisor. Cheap
+        to call often — the supervisor samples once per heartbeat period.
+        Returns True when a sample was actually taken. The driver's own
+        bounded waits call this on their probe cadence, so a pipeline
+        being driven supervises itself."""
+        sup = self._supervisor
+        if sup is None:
+            return False
+        completed = [node.items_out for node in self._nodes]
+        outstanding = [max(self._fed - c, 0) for c in completed]
+        return sup.observe(completed, outstanding)
+
+    def stalled_stages(self) -> List[str]:
+        """Names of stages with a backlog and no progress for ~2 heartbeat
+        periods. Advisory: one long-running item and a wedged assistant
+        look identical here — the bounded waits decide *dead*."""
+        sup = self._supervisor
+        if sup is None:
+            return []
+        return [self._nodes[i].name for i in sup.stalled()]
+
+    def straggler_stages(self) -> List[str]:
+        """Names of stages persistently slower than their peers (the
+        StragglerMonitor's median/MAD z-score over per-period pace)."""
+        sup = self._supervisor
+        if sup is None:
+            return []
+        return [self._nodes[i].name for i in sup.stragglers()]
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "Pipeline":
@@ -256,9 +308,10 @@ class Pipeline:
             spins += 1
             if spins % self._pause_every == 0:
                 time.sleep(0)
-            if (self._probe_every and spins % self._probe_every == 0
-                    and not first.alive()):
-                raise self._dead(first)
+            if self._probe_every and spins % self._probe_every == 0:
+                self.check_stages()
+                if not first.alive():
+                    raise self._dead(first)
             if self._source.push(item):
                 self._fed += 1
                 return
@@ -298,13 +351,14 @@ class Pipeline:
             spins += 1
             if spins % self._pause_every == 0:
                 time.sleep(0)
-            if (self._probe_every and spins % self._probe_every == 0
-                    and not last.alive()):
-                item = pop()    # final re-pop: published right before death
-                if item is not None and item is not STOP:
-                    self._got += 1
-                    return item
-                raise self._dead(last)
+            if self._probe_every and spins % self._probe_every == 0:
+                self.check_stages()
+                if not last.alive():
+                    item = pop()  # final re-pop: published right before death
+                    if item is not None and item is not STOP:
+                        self._got += 1
+                        return item
+                    raise self._dead(last)
 
     def get(self) -> Any:
         """Next output item; raises :class:`StreamError` (chaining the
@@ -368,15 +422,16 @@ class Pipeline:
             spins += 1
             if spins % self._pause_every == 0:
                 time.sleep(0)
-            if (self._probe_every and spins % self._probe_every == 0
-                    and not last.alive()):
-                item = pop()
-                if item is not None and item is not STOP:
-                    self._got += 1
-                    out.append(unwrap(item))
-                    spins = 0
-                    continue
-                raise self._dead(last)
+            if self._probe_every and spins % self._probe_every == 0:
+                self.check_stages()
+                if not last.alive():
+                    item = pop()
+                    if item is not None and item is not STOP:
+                        self._got += 1
+                        out.append(unwrap(item))
+                        spins = 0
+                        continue
+                    raise self._dead(last)
 
     def __iter__(self):
         """Drain whatever is in flight, in order (no further feeding)."""

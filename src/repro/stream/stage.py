@@ -48,7 +48,7 @@ probes, exactly like a killed Relic assistant.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List, Optional, Union
+from typing import Any, Callable, Iterable, List, Optional, Union
 
 from repro.core.relic import _PROBE_EVERY_SPINS, RelicDeadError
 from repro.core.schedulers import Scheduler, make_scheduler
@@ -59,7 +59,7 @@ from repro.runtime.metrics import Gauge, LatencySeries
 from repro.tasks.api import TaskScope
 
 __all__ = ["STOP", "StreamFailure", "StreamError", "StreamUsageError",
-           "Stage", "worker_alive"]
+           "StageFailedError", "Stage", "worker_alive"]
 
 
 class _Stop:
@@ -101,6 +101,27 @@ class StreamError(RuntimeError):
 class StreamUsageError(RuntimeError):
     """Structural misuse of the streaming API (wrong lifecycle order,
     un-hostable substrate, get without put)."""
+
+
+class StageFailedError(RelicDeadError):
+    """A stream stage died with in-flight items — and here is *which*.
+
+    The stream-layer refinement of :class:`RelicDeadError`: on top of the
+    fed/drained/lost counters it carries ``stage`` (the dead loop's name)
+    and ``lost_tags`` — the exact sequence tags of the items that were
+    dealt to the dead stage and never released, computed as
+    dealt-minus-released by the farm collector's per-worker ledger. With
+    the tags in hand a caller can re-submit precisely the lost work (the
+    primitive ``Farm(respawn=True)``'s own re-emit is built on) instead of
+    guessing from a bare count.
+    """
+
+    def __init__(self, lane: str, submitted: int, completed: int,
+                 lost_tags: Iterable[int], stage: str = "") -> None:
+        tags = tuple(sorted(lost_tags))
+        super().__init__(lane, submitted, completed, len(tags))
+        self.stage = stage
+        self.lost_tags = tags
 
 
 def worker_alive(sched: Scheduler) -> bool:
@@ -186,6 +207,11 @@ class Stage:
         self._probe_every = (_PROBE_EVERY_SPINS
                              if resolve_supervise_config().supervise else 0)
         self._pause_every = resolve_spin_pause_every()
+        # Opt-in chaos hook (None in production): consulted once per popped
+        # data item; a fired switch kills the loop with the item popped but
+        # unprocessed — the deterministic "stage died with in-flight work"
+        # scenario. See repro.runtime.chaos.StageKillSwitch.
+        self._chaos_kill: Optional[Callable[[int], bool]] = None
 
     # -- wiring (called by the composition layer, before start) ------------
     @property
@@ -330,6 +356,9 @@ class Stage:
             if item is STOP:
                 self._push_out(STOP)
                 return
+            if (self._chaos_kill is not None
+                    and self._chaos_kill(self.items_in)):
+                raise SystemExit("chaos: stage loop killed")
             self.items_in += 1
             if type(item) is StreamFailure:
                 self._push_out(item)        # failed upstream: forward as-is
